@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: scheduled GEMM wall time (CPU, for the CSV
+contract) + modeled TPU cycles for the schedule the backend picked.
+
+On this CPU container the Pallas kernel runs in interpret mode (Python
+loop — not a performance number); the *scheduled XLA path* (same schedule,
+jnp lowering) is what we time, and the cycle model supplies the
+TPU-modeled latency (derived column).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.arch_spec import GemmWorkload
+from repro.core.descriptions import make_tpu_v5e_description
+from repro.core.mapping import MappingGenerator
+from repro.core.scheduler import ExtendedCosaScheduler
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def bench(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main():
+    desc = make_tpu_v5e_description()
+    sched = ExtendedCosaScheduler(desc.arch)
+    mg = MappingGenerator(desc)
+    rows = []
+    for m, k, n in [(512, 512, 512), (1024, 1024, 1024), (512, 4096, 1024)]:
+        wl = GemmWorkload(N=m, C=k, K=n, in_bytes=2, w_bytes=2, out_bytes=4)
+        result = sched.schedule(wl)
+        cfg = mg.to_kernel_config(result.best, interpret=False)
+        x = jax.random.normal(jax.random.key(0), (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.key(1), (k, n), jnp.float32)
+
+        t_sched = bench(lambda a, b: kops.matmul(a, b, cfg, use_pallas=False), x, w)
+        t_ref = bench(lambda a, b: kref.gemm_ref(a, b), x, w)
+        modeled_us = result.report.total_cycles / desc.arch.freq_hz * 1e6
+        rows.append((f"gemm_{m}x{k}x{n}", t_sched, f"ref_us={t_ref:.0f};tpu_model_us={modeled_us:.1f};df={result.best.dataflow}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")

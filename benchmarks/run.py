@@ -1,0 +1,59 @@
+"""Benchmark orchestrator — one function per paper table + the roofline
+collation.  Prints ``name,us_per_call,derived`` CSV lines per the repo
+contract, then the human-readable tables.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import kernels_bench, roofline, table1_loc, table2_latency
+
+    csv_rows = []
+
+    # -- Table 1: LoC (derived = reduction %) -------------------------------
+    t0 = time.perf_counter()
+    t1 = table1_loc.main()
+    csv_rows.append(
+        (
+            "table1_loc",
+            (time.perf_counter() - t0) * 1e6,
+            f"reduction={t1['reduction']:.2%};paper={t1['paper_reduction']:.2%}",
+        )
+    )
+
+    # -- Table 2: latency (derived = prop/ctool and naive/ctool @512) -------
+    t0 = time.perf_counter()
+    t2 = table2_latency.main()
+    last = t2["layers"][-1]
+    csv_rows.append(
+        (
+            "table2_latency",
+            (time.perf_counter() - t0) * 1e6,
+            f"prop/ctool={last['prop/ctool']:.3f};naive/ctool={last['naive/ctool']:.1f};"
+            f"toycar_naive/ctool={t2['toycar']['naive/ctool']:.1f}",
+        )
+    )
+
+    # -- kernel micro-bench ---------------------------------------------------
+    for name, us, derived in kernels_bench.main():
+        csv_rows.append((name, us, derived))
+
+    # -- roofline collation ----------------------------------------------------
+    t0 = time.perf_counter()
+    cells = roofline.main()
+    ok = sum(1 for c in cells if c.get("status") == "ok")
+    csv_rows.append(
+        ("roofline_cells", (time.perf_counter() - t0) * 1e6, f"cells_ok={ok}")
+    )
+
+    print("\n== CSV ==")
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""ToyCar network (MLPerf-Tiny anomaly detection) as a quantized graph.
+
+FC autoencoder: 640 -> 128 x3 -> 8 -> 128 x3 -> 640, int8 quantized, batch
+1 — the end-to-end workload of the paper's Table 2.  Each dense layer is
+the full TFLite-style op sequence (dense -> bias_add -> requantize -> clip)
+with float weights entering through the registered preprocessing ops
+(transpose + quantize), so the naive backend pays for them at "run time"
+exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ir
+
+LAYERS = [640, 128, 128, 128, 8, 128, 128, 128, 640]
+
+
+def toycar_graph(batch: int = 1, seed: int = 0) -> ir.Graph:
+    rng = np.random.default_rng(seed)
+    x = ir.input_((batch, LAYERS[0]), "int8", name="x")
+    h = x
+    for i in range(len(LAYERS) - 1):
+        d_in, d_out = LAYERS[i], LAYERS[i + 1]
+        w_fp = ir.const(
+            (rng.normal(size=(d_out, d_in)) * 0.05).astype(np.float32),
+            name=f"w{i}",
+        )
+        w_q = ir.quantize(ir.transpose(w_fp, (1, 0)), scale=0.05)
+        b = ir.const(
+            rng.integers(-64, 64, size=(d_out,)).astype(np.int32), name=f"b{i}"
+        )
+        d = ir.dense(h, w_q)
+        ba = ir.bias_add(d, b)
+        rq = ir.requantize(ba, scale=1.0 / 64.0)
+        h = ir.clip(rq)
+    return ir.Graph([h], name="toycar")
+
+
+def toycar_input(batch: int = 1, seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(-128, 128, size=(batch, LAYERS[0])).astype(np.int8)

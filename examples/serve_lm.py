@@ -1,0 +1,57 @@
+"""Batched serving example: continuous-batching engine over a request pool
+(prefill + decode with per-arch KV caches; MusicGen backbone by default).
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 12 --batch 4
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serve import ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="musicgen_medium")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).with_(frontend=None, n_frontend_tokens=0)
+    params = lm.init_lm(jax.random.key(0), cfg)
+    engine = ServingEngine(
+        cfg,
+        params,
+        ServeConfig(
+            batch=args.batch,
+            max_len=args.prompt_len + args.new_tokens + 1,
+            max_new_tokens=args.new_tokens,
+        ),
+    )
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=(args.prompt_len,)).astype(np.int32)
+        for _ in range(args.requests)
+    ]
+    t0 = time.perf_counter()
+    done = engine.generate(prompts)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.output) for r in done)
+    print(f"{cfg.name}: served {len(done)} requests / {n_tok} tokens "
+          f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s on CPU)")
+    print("sample:", done[0].output)
+    # determinism: same engine, same prompts -> same outputs
+    again = engine.generate(prompts[: args.batch])
+    assert again[0].output == done[0].output
+    print("deterministic decode: OK")
+
+
+if __name__ == "__main__":
+    main()

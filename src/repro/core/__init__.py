@@ -1,0 +1,23 @@
+"""The paper's primary contribution: a compiler-integration framework for
+GEMM-based DL accelerators — accelerator descriptions, extended-CoSA
+scheduling, and the generated backend (configurators -> strategies ->
+intrinsics -> mappings -> executables + cycle model)."""
+
+from repro.core.accel import AcceleratorDescription
+from repro.core.arch_spec import ArchSpec, GemmWorkload, conv2d_as_gemm
+from repro.core.configurators import build_backend
+from repro.core.schedule import Schedule, validate_schedule
+from repro.core.scheduler import ExtendedCosaScheduler
+from repro.core.simulator import simulate
+
+__all__ = [
+    "AcceleratorDescription",
+    "ArchSpec",
+    "GemmWorkload",
+    "conv2d_as_gemm",
+    "build_backend",
+    "Schedule",
+    "validate_schedule",
+    "ExtendedCosaScheduler",
+    "simulate",
+]

@@ -1,0 +1,63 @@
+"""Frontend / Backend Configurators (paper §3.3, Fig. 1).
+
+``build_backend(desc)`` is the paper's automated flow: from a hardware
+model (functional + architectural description) it generates a complete
+compiler backend — graph partitioning + legalization setup (Frontend
+Configurator), strategy generation, hardware-intrinsic generation, and
+the CoSA-driven mapping generator (Backend Configurator) — "with minimal
+manual effort, unlike existing methods that branch out to custom
+backends."
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.accel import AcceleratorDescription
+from repro.core.intrinsics import HardwareIntrinsicGenerator
+from repro.core.ir import Graph
+from repro.core.mapping import MappingGenerator
+from repro.core.passes import run_frontend
+from repro.core.pipeline import CompilerBackend
+from repro.core.scheduler import ExtendedCosaScheduler
+from repro.core.strategy import StrategyGenerator
+
+
+@dataclass
+class FrontendConfigurator:
+    """Sets up graph partitioning and legalization passes using the
+    predefined supported operators derived from the functional description."""
+
+    desc: AcceleratorDescription
+
+    def configure(self, graph: Graph, *, fold: bool = True, legalize: bool = True) -> Graph:
+        return run_frontend(graph, self.desc, fold=fold, do_legalize=legalize)
+
+
+@dataclass
+class BackendConfigurator:
+    """Generates the backend components from the accelerator description."""
+
+    desc: AcceleratorDescription
+    use_mip: bool = True
+
+    def configure(self, *, use_pallas: bool = False) -> CompilerBackend:
+        errs = self.desc.validate()
+        if errs:
+            raise ValueError(f"invalid accelerator description: {errs}")
+        scheduler = ExtendedCosaScheduler(self.desc.arch, use_mip=self.use_mip)
+        return CompilerBackend(
+            desc=self.desc,
+            scheduler=scheduler,
+            strategy_gen=StrategyGenerator(self.desc),
+            intrinsic_gen=HardwareIntrinsicGenerator(self.desc),
+            mapping_gen=MappingGenerator(self.desc),
+            use_pallas=use_pallas,
+        )
+
+
+def build_backend(
+    desc: AcceleratorDescription, *, use_mip: bool = True, use_pallas: bool = False
+) -> CompilerBackend:
+    """One-call accelerator integration (the paper's headline API)."""
+    return BackendConfigurator(desc, use_mip=use_mip).configure(use_pallas=use_pallas)

@@ -1,0 +1,4 @@
+from repro.core.descriptions.gemmini import make_gemmini_description
+from repro.core.descriptions.tpu_v5e import make_tpu_v5e_description
+
+__all__ = ["make_gemmini_description", "make_tpu_v5e_description"]

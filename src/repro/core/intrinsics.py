@@ -1,0 +1,75 @@
+"""Hardware Intrinsic Generator (paper §3.3).
+
+TVM tensorization requires registering, per intrinsic, a computation
+*description* and an *implementation*; the paper generates both from the
+functional description instead of requiring manual registration.  Here the
+generated ``TensorIntrinsic`` carries:
+
+  * the tile-shape description (what computation region it matches —
+    checked against the schedule's PE-level factors, i.e. Eq. 1),
+  * the implementation (the registered compute intrinsic function; on TPU
+    this is the MXU ``dot_general`` the Pallas kernel body invokes),
+  * accumulator dtype and epilogue capability flags.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.core.accel import AcceleratorDescription, IntrinsicDef
+from repro.core.arch_spec import GEMM_DIMS
+from repro.core.schedule import Schedule
+
+
+@dataclass(frozen=True)
+class TensorIntrinsic:
+    name: str
+    tag: str
+    tile_limits: dict[str, int]
+    impl: Callable
+    quantized: bool
+
+    def matches(self, schedule: Schedule) -> bool:
+        """Description side of tensorize: does the schedule's PE-level tile
+        fit this intrinsic's region?"""
+        pe = schedule.pe_tile()
+        return all(pe[j] <= self.tile_limits.get(j, 10**9) for j in GEMM_DIMS)
+
+
+class HardwareIntrinsicGenerator:
+    """Auto-generates tensor intrinsics from the accelerator description."""
+
+    def __init__(self, desc: AcceleratorDescription):
+        self.desc = desc
+        self._by_tag: dict[str, TensorIntrinsic] = {}
+        for intr in desc.intrinsics.values():
+            if intr.kind != "compute":
+                continue
+            cc = desc.core_computes.get(intr.tag or "")
+            self._by_tag[intr.tag] = TensorIntrinsic(
+                name=intr.name,
+                tag=intr.tag or "",
+                tile_limits=dict(intr.tile_limits or {}),
+                impl=intr.fn,
+                quantized=bool(cc and cc.quantized),
+            )
+
+    def for_tag(self, tag: str) -> TensorIntrinsic:
+        if tag not in self._by_tag:
+            raise KeyError(
+                f"{self.desc.name}: no compute intrinsic generated for tag {tag!r}"
+            )
+        return self._by_tag[tag]
+
+    def all(self) -> list[TensorIntrinsic]:
+        return list(self._by_tag.values())
+
+    def tensorize_check(self, tag: str, schedule: Schedule) -> None:
+        intr = self.for_tag(tag)
+        if not intr.matches(schedule):
+            raise ValueError(
+                f"schedule PE tile {schedule.pe_tile()} exceeds intrinsic "
+                f"{intr.name} limits {intr.tile_limits} — Eq.(1) violated "
+                f"upstream"
+            )

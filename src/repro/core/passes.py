@@ -1,0 +1,179 @@
+"""Compiler passes of the integration flow (paper §3.3).
+
+* ``legalize`` — the Frontend Configurator's legalization pass: rewrites the
+  quantized multi-op sequence (dense -> bias_add -> requantize -> clip) and
+  float sequences (dense -> bias_add [-> activation]) into *generalized*
+  operators so TIR-level lowering sees a single op (§3.3 "we introduce
+  generalized Relay operators ... a legalization pass rewrites the sequence
+  into a single operator").
+
+* ``fold_constants`` — evaluates constant subgraphs at compile time.  This
+  is the pass the paper had to fight TVM for ("TVM typically disables
+  constant folding for matched operators after graph partitioning"): all
+  registered *constant* preprocessing (weight transposition, quantization)
+  disappears from the runtime graph.  The naive BYOC mode skips it — and
+  pays at run time, reproducing Table 2's blowup.
+
+* ``partition`` — marks accelerator-supported operators (from the
+  functional description) with ``target="accel"``; everything else remains
+  on the host, mirroring BYOC graph partitioning.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.accel import AcceleratorDescription
+from repro.core.ir import Graph, Node, execute_node
+
+
+def _single_consumer(n: Node, consumers) -> bool:
+    return len(consumers.get(n, [])) == 1
+
+
+def _gen_op_for(core: Node) -> str:
+    return "generalized_dense" if core.op == "dense" else "generalized_conv2d"
+
+
+def _fuse_quantized(graph: Graph) -> bool:
+    """clip(requantize(bias_add(dense|conv2d))) -> one generalized op."""
+    consumers = graph.consumers()
+    for n in graph.toposort():
+        if n.op != "clip" or n.inputs[0].op != "requantize":
+            continue
+        rq = n.inputs[0]
+        if rq.inputs[0].op != "bias_add":
+            continue
+        ba = rq.inputs[0]
+        core = ba.inputs[0]
+        if core.op in ("dense", "conv2d") and all(
+            _single_consumer(x, consumers) for x in (rq, ba, core)
+        ):
+            new = Node(
+                _gen_op_for(core),
+                [core.inputs[0], core.inputs[1], ba.inputs[1]],
+                {
+                    **core.attrs,
+                    "quantized": True,
+                    "requant_scale": rq.attrs["scale"],
+                    "clip_lo": n.attrs["lo"],
+                    "clip_hi": n.attrs["hi"],
+                },
+                shape=n.shape,
+                dtype=n.dtype,
+            )
+            graph.replace_node(n, new)
+            return True
+    return False
+
+
+def _fuse_activation(graph: Graph) -> bool:
+    """activation(bias_add(dense|conv2d)) -> one generalized op."""
+    consumers = graph.consumers()
+    for n in graph.toposort():
+        if n.op not in ("relu", "gelu") or n.inputs[0].op != "bias_add":
+            continue
+        ba = n.inputs[0]
+        core = ba.inputs[0]
+        if core.op in ("dense", "conv2d") and all(
+            _single_consumer(x, consumers) for x in (ba, core)
+        ):
+            new = Node(
+                _gen_op_for(core),
+                [core.inputs[0], core.inputs[1], ba.inputs[1]],
+                {**core.attrs, "quantized": False, "activation": n.op},
+                shape=n.shape,
+                dtype=n.dtype,
+            )
+            graph.replace_node(n, new)
+            return True
+    return False
+
+
+def _fuse_bias(graph: Graph) -> bool:
+    """bias_add(dense|conv2d) -> one generalized op (no epilogue)."""
+    consumers = graph.consumers()
+    for n in graph.toposort():
+        if n.op != "bias_add":
+            continue
+        core = n.inputs[0]
+        if core.op in ("dense", "conv2d") and _single_consumer(core, consumers):
+            new = Node(
+                _gen_op_for(core),
+                [core.inputs[0], core.inputs[1], n.inputs[1]],
+                {**core.attrs, "quantized": False, "activation": None},
+                shape=n.shape,
+                dtype=n.dtype,
+            )
+            graph.replace_node(n, new)
+            return True
+    return False
+
+
+def legalize(graph: Graph) -> Graph:
+    """Fuse op sequences into generalized operators.
+
+    Rules run in priority order (longest pattern first) so the quantized
+    chain is matched before its bias_add sub-pattern; each rule iterates to
+    fixpoint before the next is tried.
+    """
+    for rule in (_fuse_quantized, _fuse_activation, _fuse_bias):
+        while rule(graph):
+            pass
+    return graph
+
+
+def fold_constants(graph: Graph) -> Graph:
+    """Evaluate nodes whose inputs are all constants; iterate to fixpoint.
+
+    Runs registered constant preprocessing (transpose/quantize on weights)
+    at compile time — the key enabler the paper identifies in §4.
+    """
+    from repro.core.ir import const
+
+    changed = True
+    while changed:
+        changed = False
+        for n in graph.toposort():
+            if n.op in ("input", "const") or n.op.startswith("generalized"):
+                continue
+            if n.inputs and all(i.is_const() for i in n.inputs):
+                try:
+                    val = execute_node(n, [i.value for i in n.inputs])
+                except NotImplementedError:
+                    continue
+                folded = const(np.asarray(val), name=f"folded_{n.name}")
+                graph.replace_node(n, folded)
+                changed = True
+                break
+    return graph
+
+
+def partition(graph: Graph, desc: AcceleratorDescription) -> Graph:
+    """Mark accelerator-supported operators (BYOC-style partitioning)."""
+    supported = desc.supported_ops()
+    for n in graph.toposort():
+        base = n.op.replace("generalized_", "")
+        if base in supported and n.op != "input":
+            n.target = "accel"
+        else:
+            n.target = "host"
+    return graph
+
+
+def run_frontend(
+    graph: Graph,
+    desc: AcceleratorDescription,
+    *,
+    fold: bool = True,
+    do_legalize: bool = True,
+) -> Graph:
+    """The Frontend Configurator's pass pipeline (§3.3): legalization (with
+    predefined supported operators from the functional description), then
+    constant folding, then graph partitioning."""
+    if do_legalize:
+        graph = legalize(graph)
+    if fold:
+        graph = fold_constants(graph)
+    graph = partition(graph, desc)
+    return graph

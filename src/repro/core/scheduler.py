@@ -1,0 +1,105 @@
+"""The scheduling loop of Fig. 2(b): sweep tuning parameters, solve the
+extended-CoSA MIP per combination, evaluate candidates on the cycle model,
+return the best schedule.
+
+::
+
+    for dataflow in accelerator.dataflows:
+        for shares in constraints.memory_share_candidates:      # uneven map
+            for dbuf in constraints.double_buffer_candidates:   # dbl buffer
+                schedule = solve_extended_cosa(workload, dataflow, shares, dbuf)
+                score    = cycle_model(schedule)                # "hardware"
+    best = argmin(score)
+
+Schedules are cached per (workload, arch) because LMs re-use the same GEMM
+shapes across layers.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+from repro.core.arch_spec import ArchSpec, GemmWorkload
+from repro.core.cosa.heuristic import solve_heuristic
+from repro.core.cosa.mip import solve_mip
+from repro.core.schedule import Schedule, validate_schedule
+from repro.core.simulator import SimReport, simulate
+
+
+@dataclass(frozen=True)
+class ScheduleResult:
+    best: Schedule
+    report: SimReport
+    n_candidates: int
+    n_infeasible: int
+
+
+@dataclass
+class ExtendedCosaScheduler:
+    arch: ArchSpec
+    use_mip: bool = True
+    mip_time_limit_s: float = 10.0
+    _cache: dict = field(default_factory=dict)
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def schedule(self, workload: GemmWorkload) -> ScheduleResult:
+        key = workload.key()
+        with self._lock:
+            if key in self._cache:
+                return self._cache[key]
+        result = self._schedule_uncached(workload)
+        with self._lock:
+            self._cache[key] = result
+        return result
+
+    def _schedule_uncached(self, workload: GemmWorkload) -> ScheduleResult:
+        c = self.arch.constraints
+        best: Schedule | None = None
+        best_report: SimReport | None = None
+        n_cand = 0
+        n_infeasible = 0
+
+        for dataflow in self.arch.dataflows:
+            for shares in c.memory_share_candidates:
+                for dbuf in c.double_buffer_candidates:
+                    sched = None
+                    if self.use_mip:
+                        sched = solve_mip(
+                            workload,
+                            self.arch,
+                            dataflow,
+                            shares,
+                            dbuf,
+                            time_limit_s=self.mip_time_limit_s,
+                        )
+                    if sched is None:
+                        sched = solve_heuristic(
+                            workload, self.arch, dataflow, shares, dbuf
+                        )
+                    if sched is None:
+                        n_infeasible += 1
+                        continue
+                    errs = validate_schedule(sched, self.arch)
+                    if errs:
+                        n_infeasible += 1
+                        continue
+                    n_cand += 1
+                    report = simulate(sched, self.arch)
+                    if (
+                        best_report is None
+                        or report.total_cycles < best_report.total_cycles
+                    ):
+                        best, best_report = sched, report
+
+        if best is None or best_report is None:
+            raise RuntimeError(
+                f"no feasible schedule for {workload.name} "
+                f"{workload.N}x{workload.C}x{workload.K} on {self.arch.name}"
+            )
+        return ScheduleResult(
+            best=best,
+            report=best_report,
+            n_candidates=n_cand,
+            n_infeasible=n_infeasible,
+        )

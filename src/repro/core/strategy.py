@@ -1,0 +1,98 @@
+"""Strategy Generator (paper §3.3).
+
+Binds the user-defined computation function (from the functional
+description) and a schedule to each accelerator-supported operator.  The
+paper's insight: UMA bypasses TE scheduling, so scheduling happens at the
+TIR level via the Mapping Generator — here, the Strategy carries the
+workload extracted from the graph node plus the extended-CoSA schedule the
+backend resolved for it.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.accel import AcceleratorDescription, CoreComputeDef
+from repro.core.arch_spec import GemmWorkload
+from repro.core.ir import Node
+from repro.core.scheduler import ScheduleResult
+
+
+_DTYPE_BYTES = {
+    "int8": 1,
+    "uint8": 1,
+    "int16": 2,
+    "bfloat16": 2,
+    "float16": 2,
+    "int32": 4,
+    "float32": 4,
+    "int64": 8,
+    "float64": 8,
+}
+
+
+def dtype_bytes(dtype: str) -> int:
+    return _DTYPE_BYTES.get(dtype, 4)
+
+
+def workload_from_node(node: Node) -> GemmWorkload:
+    """Extract the GEMM workload of a (generalized) dense/conv node."""
+    x, w = node.inputs[0], node.inputs[1]
+    base = node.op.replace("generalized_", "")
+    if base == "dense":
+        n_dim = math.prod(x.shape[:-1])
+        c_dim = x.shape[-1]
+        k_dim = w.shape[-1]
+    elif base == "conv2d":
+        stride = node.attrs.get("stride", 1)
+        padding = node.attrs.get("padding", 0)
+        nb, h, wd, ci = x.shape
+        kh, kw, _, co = w.shape
+        oh = (h + 2 * padding - kh) // stride + 1
+        ow = (wd + 2 * padding - kw) // stride + 1
+        n_dim = nb * oh * ow
+        c_dim = kh * kw * ci
+        k_dim = co
+    else:
+        raise ValueError(f"not a GEMM-family node: {node.op}")
+    # accumulator width: int32 for quantized, f32 otherwise
+    quantized = node.attrs.get("quantized", False) or x.dtype.startswith("int")
+    return GemmWorkload(
+        N=n_dim,
+        C=c_dim,
+        K=k_dim,
+        in_bytes=dtype_bytes(x.dtype),
+        w_bytes=dtype_bytes(w.dtype),
+        out_bytes=4 if quantized else dtype_bytes(node.dtype),
+        name=node.name,
+    )
+
+
+@dataclass
+class Strategy:
+    """Lowering strategy for one accelerator-offloaded operator."""
+
+    node: Node
+    compute: CoreComputeDef
+    workload: GemmWorkload
+    schedule_result: ScheduleResult
+
+    @property
+    def schedule(self):
+        return self.schedule_result.best
+
+
+@dataclass
+class StrategyGenerator:
+    desc: AcceleratorDescription
+
+    def generate(self, node: Node, schedule_result: ScheduleResult) -> Strategy:
+        base = node.op.replace("generalized_", "")
+        compute = self.desc.compute_for_op(base)
+        return Strategy(
+            node=node,
+            compute=compute,
+            workload=workload_from_node(node),
+            schedule_result=schedule_result,
+        )

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical GEMM path.
+
+The paper's contribution is scheduling GEMM operators for a scratchpad
+accelerator; on TPU the schedule lowers to these kernels' BlockSpecs.
+``ref.py`` holds the pure-jnp oracles each kernel is validated against.
+"""
+
+from repro.kernels.gemm import GemmKernelConfig, scheduled_gemm
+from repro.kernels.qgemm import scheduled_qgemm
+from repro.kernels import ops, ref
+
+__all__ = ["GemmKernelConfig", "scheduled_gemm", "scheduled_qgemm", "ops", "ref"]

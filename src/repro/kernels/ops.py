@@ -1,0 +1,98 @@
+"""Jit-friendly public wrappers around the Pallas kernels.
+
+Handles shape padding (the scheduler pads dims to hardware alignment before
+factorization; the kernels require exact multiples of the block shape),
+batch-dim flattening, and a pure-jnp fallback (`use_pallas=False`) so the
+same call sites run on CPU tests, interpret-mode validation, and real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gemm import GemmKernelConfig, scheduled_gemm
+from repro.kernels.qgemm import scheduled_qgemm
+from repro.kernels import ref
+
+
+def _pad_dim(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: GemmKernelConfig,
+    bias: jax.Array | None = None,
+    *,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """epilogue(x @ w + bias) with leading batch dims on x flattened into m."""
+    *batch, m_in, k = x.shape
+    n = w.shape[1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+
+    if not use_pallas:
+        out = ref.gemm_ref(
+            x2,
+            w,
+            bias,
+            acc_dtype=cfg.acc_dtype,
+            out_dtype=cfg.out_dtype,
+            activation=cfg.activation,
+        )
+        return out.reshape(*batch, m_in, n)
+
+    xp = _pad_dim(_pad_dim(x2, 0, cfg.block_m), 1, cfg.block_k)
+    wp = _pad_dim(_pad_dim(w, 0, cfg.block_k), 1, cfg.block_n)
+    bp = None
+    if bias is not None:
+        bp = _pad_dim(bias, 0, cfg.block_n)
+        cfg = cfg if cfg.has_bias else GemmKernelConfig(**{**cfg.__dict__, "has_bias": True})
+    out = scheduled_gemm(xp, wp, cfg, bp)
+    return out[:m, :n].reshape(*batch, m_in, n)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def qmatmul(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    bias: jax.Array | None,
+    cfg: GemmKernelConfig,
+    *,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Quantized generalized dense (int8 in/out, fused requant+clip)."""
+    *batch, m_in, k = x_q.shape
+    n = w_q.shape[1]
+    x2 = x_q.reshape(-1, k)
+    m = x2.shape[0]
+
+    if not use_pallas:
+        out = ref.qgemm_ref(
+            x2,
+            w_q,
+            bias,
+            requant_scale=cfg.requant_scale,
+            clip_lo=cfg.clip_lo if cfg.clip_lo is not None else -128.0,
+            clip_hi=cfg.clip_hi if cfg.clip_hi is not None else 127.0,
+            out_dtype=cfg.out_dtype,
+        )
+        return out.reshape(*batch, m_in, n)
+
+    xp = _pad_dim(_pad_dim(x2, 0, cfg.block_m), 1, cfg.block_k)
+    wp = _pad_dim(_pad_dim(w_q, 0, cfg.block_k), 1, cfg.block_n)
+    bp = _pad_dim(bias, 0, cfg.block_n) if bias is not None else None
+    out = scheduled_qgemm(xp, wp, bp, cfg)
+    return out[:m, :n].reshape(*batch, m_in, n)

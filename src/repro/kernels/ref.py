@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    acc_dtype=jnp.float32,
+    out_dtype=jnp.float32,
+    activation: str | None = None,
+) -> jax.Array:
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.dtype(acc_dtype)
+    )
+    if bias is not None:
+        acc = acc + bias.astype(acc.dtype)
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0)
+    elif activation == "gelu":
+        acc = jax.nn.gelu(acc)
+    return acc.astype(out_dtype)
+
+
+def qgemm_ref(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    bias: jax.Array | None,
+    *,
+    requant_scale: float,
+    clip_lo: float = -128.0,
+    clip_hi: float = 127.0,
+    out_dtype=jnp.int8,
+) -> jax.Array:
+    """Quantized dense: int8 x int8 -> int32 acc -> requantize -> clip."""
+    acc = jax.lax.dot_general(
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)
+    out = jnp.round(acc.astype(jnp.float32) * requant_scale)
+    out = jnp.clip(out, clip_lo, clip_hi)
+    return out.astype(out_dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, H, S, D]
+    k: jax.Array,  # [B, H_kv, S, D]
+    v: jax.Array,  # [B, H_kv, S, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    h_kv = k.shape[1]
+    if h_kv != h:
+        rep = h // h_kv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

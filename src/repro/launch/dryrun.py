@@ -1,0 +1,661 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**input_specs).compile()`` must succeed on
+the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh for every
+assigned architecture and its shape suite.  The compiled artifact yields
+``memory_analysis()`` (fits-in-HBM evidence) and ``cost_analysis()``
+(FLOPs/bytes for the roofline), and the HLO text yields collective bytes.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi_34b --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+
+Shape-cell semantics (assignment): ``train_4k`` lowers train_step,
+``prefill_32k`` lowers the prefill step, ``decode_*``/``long_*`` lower
+serve (one token against a filled cache); long_500k runs only for the
+SSM/hybrid archs.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeCell, shapes_for
+from repro.optim import AdamWConfig, adamw_init
+from repro.parallel import sharding as shd
+from repro.train.step import TrainState, make_train_step
+
+# ---------------------------------------------------------------------------
+# hardware constants (TPU v5e) for the roofline terms
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link (3D/2D torus: ~4 usable links; per-link figure)
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+    "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+_DEF_RE = re.compile(
+    r"=\s*(.*?)\s*(all-gather-start|all-reduce-start|reduce-scatter-start|"
+    r"all-to-all-start|collective-permute-start|all-gather|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute)\("
+)
+
+
+def collective_bytes(hlo_text: str, loop_trip_count: int = 1) -> dict[str, float]:
+    """Sum result bytes of every collective op *definition* in the
+    (per-device) HLO.  The result type sits between '=' and the op name:
+    ``%ag = bf16[16,512] all-gather(...)``; async pairs are counted once
+    (the -start definition), -done and fusion *uses* are skipped.
+
+    HLO text contains each while-loop *body* once; collectives inside
+    computations that look like loop bodies are multiplied by
+    ``loop_trip_count`` (= the scan group count) so per-step collectives
+    are charged for every iteration.
+    """
+    out: dict[str, float] = {}
+    in_loop_body = False
+    depth = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # computation headers look like: %name (args) -> type {
+        if stripped.endswith("{") and not stripped.startswith("ROOT"):
+            name = stripped.split(" ", 1)[0].lstrip("%")
+            if depth == 0:
+                in_loop_body = ("body" in name or "while" in name) and "cond" not in name
+            depth += stripped.count("{") - stripped.count("}")
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        m = _DEF_RE.search(line)
+        if m is None:
+            continue
+        raw_op = m.group(2)
+        result_type, op = m.group(1), raw_op.removesuffix("-start")
+        sizes = []
+        for dt, dims in _SHAPE_RE.findall(result_type):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            sizes.append(n * _DTYPE_BYTES[dt])
+        # async -start results are (src, dst) tuples: count the dst only
+        nbytes = max(sizes) if raw_op.endswith("-start") and sizes else sum(sizes)
+        if nbytes:
+            mult = loop_trip_count if in_loop_body else 1
+            out[op] = out.get(op, 0.0) + nbytes * mult
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def cell_config(arch: str, cell: ShapeCell) -> ModelConfig:
+    cfg = get_config(arch)
+    if cell.kind == "decode" and not cfg.kv_lora_rank:
+        # int8-quantized KV for the big decode cells (MLA latents stay bf16)
+        cfg = cfg.with_(kv_cache_dtype="int8")
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    nf = cfg.n_frontend_tokens if cfg.frontend else 0
+    s_text = s - nf
+    if cell.kind == "train":
+        batch = {
+            "inputs": _sds((b, s_text), "int32"),
+            "targets": _sds((b, s_text), "int32"),
+        }
+        if nf:
+            batch["frontend"] = _sds((b, nf, cfg.d_model), "bfloat16")
+        return {"batch": batch}
+    if cell.kind == "prefill":
+        batch = {"inputs": _sds((b, s_text), "int32")}
+        if nf:
+            batch["frontend"] = _sds((b, nf, cfg.d_model), "bfloat16")
+        return {"batch": batch}
+    # decode: one token against a cache of length s
+    return {"token": _sds((b, 1), "int32")}
+
+
+def _eval_shape_tree(fn, *args, **kwargs):
+    return jax.eval_shape(fn, *args, **kwargs)
+
+
+def build_cell(
+    arch: str,
+    cell: ShapeCell,
+    mesh,
+    *,
+    block_skip: bool = False,
+    attn_chunk: int | None = None,
+    boundary: str = "seq",
+    capacity_factor: float | None = None,
+):
+    """Returns (jitted_fn, arg_shapes) ready to .lower().
+
+    The keyword knobs are the §Perf hillclimb variants: causal KV-chunk
+    skipping, attention chunk size, the layer-boundary sharding mode, and
+    the MoE capacity factor.
+    """
+    from repro.parallel import policy
+
+    policy.install(mesh, boundary=boundary)
+    cfg = cell_config(arch, cell)
+    if attn_chunk:
+        cfg = cfg.with_(attn_chunk=attn_chunk)
+    if capacity_factor and cfg.moe:
+        import dataclasses
+
+        cfg = cfg.with_(
+            moe=dataclasses.replace(cfg.moe, capacity_factor=capacity_factor)
+        )
+    b = cell.global_batch
+    key = jax.random.key(0)
+
+    params_shapes = jax.eval_shape(lambda: lm.init_lm(key, cfg))
+    pspecs = shd.param_specs(cfg, params_shapes, mesh)
+    dp = tuple(shd.dp_axes(mesh))
+
+    def shard(tree, specs):
+        return jax.tree.map(
+            lambda x, sp: jax.ShapeDtypeStruct(
+                x.shape, x.dtype, sharding=NamedSharding(mesh, sp)
+            ),
+            tree,
+            specs,
+        )
+
+    specs = input_specs(cfg, cell)
+
+    if cell.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype="float32")
+        opt_shapes = jax.eval_shape(lambda: adamw_init(opt_cfg, params_shapes))
+        ospecs = shd.opt_state_specs(cfg, opt_shapes, pspecs)
+        state_shapes = TrainState(params_shapes, opt_shapes)
+        state_specs = TrainState(pspecs, ospecs)
+        batch_specs = jax.tree.map(lambda _: P(dp), specs["batch"])
+        step = make_train_step(cfg, opt_cfg, block_skip=block_skip)
+        jfn = jax.jit(
+            step,
+            in_shardings=(
+                jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                             is_leaf=lambda x: isinstance(x, P)),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs,
+                             is_leaf=lambda x: isinstance(x, P)),
+            ),
+            out_shardings=(
+                jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                             is_leaf=lambda x: isinstance(x, P)),
+                None,
+            ),
+            donate_argnums=(0,),
+        )
+        args = (shard(state_shapes, state_specs), shard(specs["batch"], batch_specs))
+        return jfn, args, cfg
+
+    if cell.kind == "prefill":
+        cache_shapes = jax.eval_shape(
+            lambda: lm.init_cache(cfg, b, cell.seq_len)
+        )
+        cspecs = shd.cache_specs(cfg, cache_shapes, mesh)
+        batch = specs["batch"]
+        bspec = {k: P(dp) if v.ndim == 2 else P(dp, None, None) for k, v in batch.items()}
+
+        def prefill_fn(params, tokens, cache, frontend=None):
+            return lm.prefill(params, cfg, tokens, cache, frontend)
+
+        in_shardings = [
+            jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P)),
+            NamedSharding(mesh, bspec["inputs"]),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P)),
+        ]
+        args = [
+            shard(params_shapes, pspecs),
+            shard(batch["inputs"], bspec["inputs"]),
+            shard(cache_shapes, cspecs),
+        ]
+        if "frontend" in batch:
+            in_shardings.append(NamedSharding(mesh, bspec["frontend"]))
+            args.append(shard(batch["frontend"], bspec["frontend"]))
+        jfn = jax.jit(
+            prefill_fn,
+            in_shardings=tuple(in_shardings),
+            out_shardings=(
+                NamedSharding(mesh, P(dp, None, "model")),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P)),
+            ),
+            donate_argnums=(2,),
+        )
+        return jfn, tuple(args), cfg
+
+    # decode
+    cache_shapes = jax.eval_shape(lambda: lm.init_cache(cfg, b, cell.seq_len))
+    cspecs = shd.cache_specs(cfg, cache_shapes, mesh)
+    # batch=1 cells (long_500k) cannot shard the token batch dim
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bdp = dp if b % dp_size == 0 else None
+    tok_spec = P(bdp, None)
+    logit_spec = P(bdp, None, "model")
+
+    def decode_fn(params, cache, token):
+        return lm.decode_step(params, cfg, cache, token)
+
+    jfn = jax.jit(
+        decode_fn,
+        in_shardings=(
+            jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P)),
+            NamedSharding(mesh, tok_spec),
+        ),
+        out_shardings=(
+            NamedSharding(mesh, logit_spec),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs, is_leaf=lambda x: isinstance(x, P)),
+        ),
+        donate_argnums=(1,),
+    )
+    args = (
+        shard(params_shapes, pspecs),
+        shard(cache_shapes, cspecs),
+        shard(specs["token"], tok_spec),
+    )
+    return jfn, args, cfg
+
+
+# ---------------------------------------------------------------------------
+# scan-body probe: XLA's cost analysis counts while-loop bodies ONCE, so a
+# G-group scanned model under-reports FLOPs/bytes by ~G x.  We compile one
+# group body with the same shardings and charge (G-1) extra copies.
+# ---------------------------------------------------------------------------
+
+
+def build_body_probe(
+    arch: str,
+    cell: ShapeCell,
+    mesh,
+    *,
+    block_skip: bool = False,
+    attn_chunk: int | None = None,
+    boundary: str = "seq",
+    capacity_factor: float | None = None,
+):
+    from repro.parallel import policy
+
+    policy.install(mesh, boundary=boundary)
+    cfg = cell_config(arch, cell)
+    if attn_chunk:
+        cfg = cfg.with_(attn_chunk=attn_chunk)
+    if capacity_factor and cfg.moe:
+        import dataclasses
+
+        cfg = cfg.with_(
+            moe=dataclasses.replace(cfg.moe, capacity_factor=capacity_factor)
+        )
+    if lm.n_scan_groups(cfg) <= 1:
+        return None
+    b = cell.global_batch
+    s = cell.seq_len if cell.kind != "decode" else 1
+    key = jax.random.key(0)
+    dp = tuple(shd.dp_axes(mesh))
+
+    params_shapes = jax.eval_shape(lambda: lm.init_lm(key, cfg))
+    pspecs = shd.param_specs(cfg, params_shapes, mesh)
+    gp_shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+        params_shapes["groups"],
+    )
+    gp_specs = jax.tree.map(
+        lambda sp: P(*sp[1:]),
+        pspecs["groups"],
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bdp = dp if b % dp_size == 0 else None  # batch=1 cells can't shard B
+    x_sds = _sds((b, s, cfg.d_model), cfg.compute_dtype)
+    x_spec = P(bdp, None, None) if s == 1 else P(bdp, "model", None)
+    pattern = cfg.pattern
+    positions_len = cell.seq_len
+
+    def group_fwd(gp, x):
+        positions = jnp.arange(x.shape[1])
+        for p, kind in enumerate(pattern):
+            x, _ = lm._apply_layer_train(
+                gp[f"pos{p}"], cfg, kind, lm._position_is_moe(cfg, p), x,
+                positions, block_skip=block_skip,
+            )
+        return x
+
+    if cell.kind == "train":
+
+        def probe(gp, x):
+            def loss(gp_, x_):
+                return jnp.sum(group_fwd(gp_, x_).astype(jnp.float32))
+
+            return jax.grad(loss, argnums=(0, 1))(gp, x)
+
+        in_sh = (
+            jax.tree.map(lambda sp: NamedSharding(mesh, sp), gp_specs,
+                         is_leaf=lambda y: isinstance(y, P)),
+            NamedSharding(mesh, x_spec),
+        )
+        args_ = (
+            jax.tree.map(
+                lambda t, sp: jax.ShapeDtypeStruct(
+                    t.shape, t.dtype, sharding=NamedSharding(mesh, sp)
+                ),
+                gp_shapes,
+                gp_specs,
+            ),
+            jax.ShapeDtypeStruct(x_sds.shape, x_sds.dtype, sharding=NamedSharding(mesh, x_spec)),
+        )
+        jfn = jax.jit(probe, in_shardings=in_sh)
+        return jfn, args_
+
+    if cell.kind == "prefill":
+        jfn = jax.jit(
+            group_fwd,
+            in_shardings=(
+                jax.tree.map(lambda sp: NamedSharding(mesh, sp), gp_specs,
+                             is_leaf=lambda y: isinstance(y, P)),
+                NamedSharding(mesh, x_spec),
+            ),
+        )
+        args_ = (
+            jax.tree.map(
+                lambda t, sp: jax.ShapeDtypeStruct(
+                    t.shape, t.dtype, sharding=NamedSharding(mesh, sp)
+                ),
+                gp_shapes,
+                gp_specs,
+            ),
+            jax.ShapeDtypeStruct(x_sds.shape, x_sds.dtype, sharding=NamedSharding(mesh, x_spec)),
+        )
+        return jfn, args_
+
+    # decode: one-group decode body with its cache slice
+    cache_shapes = jax.eval_shape(lambda: lm.init_cache(cfg, b, positions_len))
+    cspecs = shd.cache_specs(cfg, cache_shapes, mesh)
+    gc_shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), cache_shapes["groups"]
+    )
+    gc_specs = jax.tree.map(
+        lambda sp: P(*sp[1:]), cspecs["groups"], is_leaf=lambda x: isinstance(x, P)
+    )
+
+    def probe(gp, gc, x, cur_len):
+        for p, kind in enumerate(pattern):
+            x, lc = lm._apply_layer_decode(
+                gp[f"pos{p}"], cfg, kind, lm._position_is_moe(cfg, p),
+                x, gc[f"pos{p}"], cur_len,
+            )
+            gc = {**gc, f"pos{p}": lc}
+        return x, gc
+
+    in_sh = (
+        jax.tree.map(lambda sp: NamedSharding(mesh, sp), gp_specs,
+                     is_leaf=lambda y: isinstance(y, P)),
+        jax.tree.map(lambda sp: NamedSharding(mesh, sp), gc_specs,
+                     is_leaf=lambda y: isinstance(y, P)),
+        NamedSharding(mesh, x_spec),
+        None,
+    )
+    jfn = jax.jit(probe, in_shardings=in_sh)
+    args_ = (
+        jax.tree.map(
+            lambda t, sp: jax.ShapeDtypeStruct(
+                t.shape, t.dtype, sharding=NamedSharding(mesh, sp)
+            ),
+            gp_shapes,
+            gp_specs,
+        ),
+        jax.tree.map(
+            lambda t, sp: jax.ShapeDtypeStruct(
+                t.shape, t.dtype, sharding=NamedSharding(mesh, sp)
+            ),
+            gc_shapes,
+            gc_specs,
+        ),
+        jax.ShapeDtypeStruct(x_sds.shape, x_sds.dtype, sharding=NamedSharding(mesh, x_spec)),
+        _sds((), "int32"),
+    )
+    return jfn, args_
+
+
+# ---------------------------------------------------------------------------
+# roofline terms from the compiled artifact
+# ---------------------------------------------------------------------------
+
+
+def analyze(
+    compiled,
+    cfg: ModelConfig,
+    cell: ShapeCell,
+    n_chips: int,
+    body_cost: dict | None = None,
+) -> dict:
+    ca = compiled.cost_analysis() or {}
+    flops_dev = float(ca.get("flops", 0.0))  # per-device (loop bodies x1)
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    n_groups = lm.n_scan_groups(cfg)
+    scan_correction = {}
+    if body_cost:
+        # charge the remaining (G-1) scan iterations (see build_body_probe)
+        extra = n_groups - 1
+        scan_correction = {
+            "body_flops_per_device": body_cost["flops"],
+            "body_bytes_per_device": body_cost["bytes"],
+            "scan_groups": n_groups,
+        }
+        flops_dev += extra * body_cost["flops"]
+        bytes_dev += extra * body_cost["bytes"]
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        mem["total_per_device"] = (
+            mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"]
+            - mem["alias_bytes"]
+        )
+    except Exception:
+        mem = {}
+    colls = collective_bytes(compiled.as_text(), loop_trip_count=n_groups)
+    coll_total = sum(colls.values())
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_total / ICI_BW
+
+    n_tok = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    nd = cfg.active_param_count()
+    model_flops = (6 if cell.kind == "train" else 2) * nd * n_tok
+    model_flops_dev = model_flops / n_chips
+
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        **scan_correction,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_total,
+        "collectives": colls,
+        "memory": mem,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_per_device": model_flops_dev,
+        "useful_flops_ratio": model_flops_dev / flops_dev if flops_dev else 0.0,
+        "roofline_fraction": (
+            max(model_flops_dev / PEAK_FLOPS, 0.0)
+            / max(compute_s, memory_s, collective_s)
+            if max(compute_s, memory_s, collective_s) > 0
+            else 0.0
+        ),
+    }
+
+
+def run_cell(
+    arch: str,
+    cell: ShapeCell,
+    multi_pod: bool,
+    out_dir: str | None,
+    probe: bool = True,
+    variant: str = "",
+    **knobs,
+):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    jfn, args, cfg = build_cell(arch, cell, mesh, **knobs)
+    with mesh:
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    body_cost = None
+    if probe:
+        built = build_body_probe(arch, cell, mesh, **knobs)
+        if built is not None:
+            pfn, pargs = built
+            with mesh:
+                pcompiled = pfn.lower(*pargs).compile()
+            pca = pcompiled.cost_analysis() or {}
+            body_cost = {
+                "flops": float(pca.get("flops", 0.0)),
+                "bytes": float(pca.get("bytes accessed", 0.0)),
+            }
+
+    report = {
+        "arch": arch,
+        "shape": cell.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "variant": variant,
+        "knobs": {k: v for k, v in knobs.items()},
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        **analyze(compiled, cfg, cell, n_chips, body_cost),
+        "status": "ok",
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{cell.name}__{report['mesh'].replace('x', '_')}"
+        if variant:
+            tag += f"__{variant}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(report, f, indent=1)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    # §Perf hillclimb knobs (variants land in --out with a __<variant> tag)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--block-skip", action="store_true")
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--boundary", choices=["seq", "none"], default="seq")
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    args = ap.parse_args()
+    knobs = dict(
+        block_skip=args.block_skip,
+        attn_chunk=args.attn_chunk,
+        boundary=args.boundary,
+        capacity_factor=args.capacity_factor,
+    )
+
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        cells = shapes_for(cfg)
+        if args.shape:
+            cells = [c for c in cells if c.name == args.shape]
+        for cell in cells:
+            for mp in meshes:
+                tag = f"{arch} x {cell.name} x {'2x16x16' if mp else '16x16'}"
+                mesh_tag = ("2x16x16" if mp else "16x16").replace("x", "_")
+                existing = os.path.join(
+                    args.out, f"{arch}__{cell.name}__{mesh_tag}.json"
+                )
+                if args.skip_existing and os.path.exists(existing):
+                    print(f"[dryrun] {tag}: skipped (exists)")
+                    continue
+                try:
+                    # roofline probes only on the single-pod mesh (the
+                    # roofline table is single-pod; multi-pod proves the
+                    # pod axis shards)
+                    rep = run_cell(
+                        arch, cell, mp, args.out, probe=not mp,
+                        variant=args.variant, **knobs,
+                    )
+                    print(
+                        f"[dryrun] {tag}: OK compile={rep['compile_s']}s "
+                        f"dominant={rep['dominant']} "
+                        f"mem/dev={rep['memory'].get('total_per_device', 0)/2**30:.2f}GiB "
+                        f"roofline={rep['roofline_fraction']:.3f}"
+                    )
+                except Exception as e:
+                    failures += 1
+                    print(f"[dryrun] {tag}: FAIL {type(e).__name__}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (not a module-level constant) so
+importing this module never touches jax device state — required because
+the dry-run must set XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi-pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(n_devices: int | None = None, model_parallel: int | None = None):
+    """Best mesh for whatever devices are available (elastic resume):
+    model axis = largest power-of-two divisor <= requested, rest data."""
+    n = n_devices or len(jax.devices())
+    mp = model_parallel or min(16, n)
+    while n % mp:
+        mp //= 2
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

@@ -1,0 +1,143 @@
+"""End-to-end training driver.
+
+Single-host example (the examples/ drivers use this):
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm_125m --smoke \
+        --steps 200 --batch 8 --seq 128
+
+On a real cluster the same entry point runs under ``jax.distributed``:
+every host builds the same mesh from its local view, feeds its host slice
+of the deterministic pipeline, and the fault-tolerant trainer handles
+checkpoint/restart + stragglers (see repro/train/trainer.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.launch.mesh import make_elastic_mesh
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init
+from repro.parallel import sharding as shd
+from repro.parallel import policy
+from repro.train import Trainer, TrainerConfig, TrainState, make_train_step
+
+
+def build_trainer(
+    arch: str,
+    *,
+    smoke: bool = True,
+    steps: int = 100,
+    global_batch: int = 8,
+    seq_len: int = 128,
+    checkpoint_dir: str = "/tmp/repro_ckpt",
+    checkpoint_every: int = 25,
+    lr: float = 3e-4,
+    mesh=None,
+    block_skip: bool = False,
+    seed: int = 0,
+):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    mesh = mesh or make_elastic_mesh()
+    policy.install(mesh)
+
+    params = lm.init_lm(jax.random.key(seed), cfg)
+    opt_cfg = AdamWConfig(lr=lr, total_steps=steps, warmup_steps=max(steps // 20, 5))
+    opt_state = adamw_init(opt_cfg, params)
+
+    pspecs = shd.param_specs(cfg, params, mesh)
+    ospecs = shd.opt_state_specs(cfg, opt_state, pspecs)
+    state = TrainState(
+        shd.shard_tree(params, pspecs, mesh),
+        shd.shard_tree(opt_state, ospecs, mesh),
+    )
+
+    dp = tuple(shd.dp_axes(mesh))
+    step_fn = make_train_step(cfg, opt_cfg, block_skip=block_skip)
+    jstep = jax.jit(
+        step_fn,
+        in_shardings=(
+            jax.tree.map(lambda s: NamedSharding(mesh, s), TrainState(pspecs, ospecs),
+                         is_leaf=lambda x: isinstance(x, P)),
+            None,
+        ),
+        out_shardings=(
+            jax.tree.map(lambda s: NamedSharding(mesh, s), TrainState(pspecs, ospecs),
+                         is_leaf=lambda x: isinstance(x, P)),
+            None,
+        ),
+        donate_argnums=(0,),
+    )
+
+    pipe = SyntheticTokenPipeline(
+        DataConfig(
+            vocab=cfg.vocab,
+            seq_len=seq_len,
+            global_batch=global_batch,
+            seed=seed,
+            n_frontend_tokens=cfg.n_frontend_tokens if cfg.frontend else 0,
+            d_model=cfg.d_model,
+        )
+    )
+
+    def shard_batch(host_batch):
+        return {
+            k: jax.device_put(v, NamedSharding(mesh, P(dp)))
+            if v.ndim == 2
+            else jax.device_put(v, NamedSharding(mesh, P(dp, None, None)))
+            for k, v in host_batch.items()
+        }
+
+    trainer = Trainer(
+        cfg=TrainerConfig(
+            total_steps=steps,
+            checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir,
+        ),
+        train_step=jstep,
+        pipeline=pipe,
+        shard_batch=shard_batch,
+    )
+    return trainer, state, cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--block-skip", action="store_true")
+    args = ap.parse_args()
+
+    trainer, state, cfg = build_trainer(
+        args.arch,
+        smoke=args.smoke,
+        steps=args.steps,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        checkpoint_dir=args.ckpt,
+        lr=args.lr,
+        block_skip=args.block_skip,
+    )
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{len(jax.devices())} devices")
+    state = trainer.run(state)
+    losses = [h["loss"] for h in trainer.history]
+    if losses:
+        print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,339 @@
+"""Attention: GQA/MQA with RoPE, sliding windows, MLA compressed KV, a
+memory-bounded blockwise (flash-style) implementation for train/prefill,
+and a sequence-shardable decode step.
+
+The blockwise implementation chunks both query and key/value axes with an
+online-softmax accumulator, so peak memory is O(chunk_q x chunk_kv) per
+head instead of O(S^2) — required for the 32k prefill cells.  Fully-masked
+KV chunks are still *computed* (static grid under jit) in the baseline;
+skipping them is one of the §Perf hillclimb steps (see
+``causal_block_skip``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.policy import constrain
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 6)
+    if cfg.kv_lora_rank:
+        r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+        return {
+            # q: per-head nope + rope parts
+            "q": L.init_dense(ks[0], d, h * (dh + dr), bias=cfg.qkv_bias, dtype=dtype),
+            # kv_down: latent (r) + shared k_rope (dr)
+            "kv_down": L.init_dense(ks[1], d, r + dr, dtype=dtype),
+            "k_up": L.init_dense(ks[2], r, h * dh, dtype=dtype),
+            "v_up": L.init_dense(ks[3], r, h * dh, dtype=dtype),
+            "o": L.init_dense(ks[4], h * dh, d, dtype=dtype),
+        }
+    return {
+        "q": L.init_dense(ks[0], d, h * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "k": L.init_dense(ks[1], d, hkv * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "v": L.init_dense(ks[2], d, hkv * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "o": L.init_dense(ks[3], h * dh, d, dtype=dtype),
+    }
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1).transpose(0, 2, 1, 3)  # [B,H,S,D]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def qkv_project(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    """Returns q [B,H,S,Dq], k [B,Hkv,S,Dq], v [B,Hkv,S,Dv] with RoPE
+    applied, plus the MLA cache payload (latent, k_rope) or (None, None).
+
+    MLA (decoupled RoPE): q/k = [nope_part | rope(rope_part)]; the rope part
+    of k is a single shared head derived from x alongside the latent, so the
+    latent itself stays position-free and decode can absorb the up-
+    projections (DeepSeek-V2 §2.1)."""
+    dh = cfg.head_dim_
+    compute = jnp.dtype(cfg.compute_dtype)
+    if cfg.kv_lora_rank:
+        r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+        q_all = _split_heads(
+            L.dense(params["q"], x, compute_dtype=compute), cfg.n_heads
+        )  # [B,H,S,dh+dr]
+        q_nope, q_rope = q_all[..., :dh], q_all[..., dh:]
+        down = L.dense(params["kv_down"], x, compute_dtype=compute)  # [B,S,r+dr]
+        latent, k_rope = down[..., :r], down[..., r:]
+        cos, sin = L.rope_tables(positions, dr, cfg.rope_theta)
+        cos_b = cos[:, None] if cos.ndim == 3 else cos[None, None]
+        sin_b = sin[:, None] if sin.ndim == 3 else sin[None, None]
+        q_rope = L.apply_rope(q_rope, cos_b, sin_b)
+        k_rope_r = L.apply_rope(k_rope[:, None], cos_b, sin_b)  # [B,1,S,dr]
+        k_nope = _split_heads(
+            L.dense(params["k_up"], latent, compute_dtype=compute), cfg.n_heads
+        )
+        v = _split_heads(
+            L.dense(params["v_up"], latent, compute_dtype=compute), cfg.n_heads
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope_r, (*k_nope.shape[:-1], dr))], axis=-1
+        )
+        q, k, v = (constrain(t, "dp", "tp", None, None) for t in (q, k, v))
+        return q, k, v, (latent, k_rope_r[:, 0])
+    q = _split_heads(L.dense(params["q"], x, compute_dtype=compute), cfg.n_heads)
+    k = _split_heads(L.dense(params["k"], x, compute_dtype=compute), cfg.n_kv_heads)
+    v = _split_heads(L.dense(params["v"], x, compute_dtype=compute), cfg.n_kv_heads)
+    cos, sin = L.rope_tables(positions, dh, cfg.rope_theta)  # [B?,S,D/2]
+    cos = cos[:, None] if cos.ndim == 3 else cos[None, None]
+    sin = sin[:, None] if sin.ndim == 3 else sin[None, None]
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    # anchor head-parallel attention: batch on data, heads on model (MQA/GQA
+    # kv heads that don't divide the axis stay replicated via the policy)
+    q, k, v = (constrain(t, "dp", "tp", None, None) for t in (q, k, v))
+    return q, k, v, (None, None)
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (trace-time helper)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+class _Carry(NamedTuple):
+    m: jax.Array  # running max      [B,H,cq]
+    l: jax.Array  # running sum      [B,H,cq]
+    acc: jax.Array  # weighted value [B,H,cq,D]
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk_q: int = 512,
+    chunk_kv: int = 512,
+    base_q_pos: int = 0,
+) -> jax.Array:
+    """Online-softmax attention over [B,H,S,D] q and [B,Hkv,Skv,D] k/v.
+
+    The baseline computes every (q-chunk, kv-chunk) pair (masked); the
+    §Perf variant ``causal_block_skip_attention`` truncates the KV range
+    per q-chunk instead.
+    """
+    b, h, sq, d = q.shape
+    dv = v.shape[-1]  # v head dim may differ (MLA)
+    hkv, skv = k.shape[1], k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    chunk_q = _pick_chunk(sq, chunk_q)
+    chunk_kv = _pick_chunk(skv, chunk_kv)
+    nq, nk = sq // chunk_q, skv // chunk_kv
+    scale = 1.0 / (d**0.5)
+
+    q = q.reshape(b, h, nq, chunk_q, d)
+    k = k.reshape(b, h, nk, chunk_kv, d)
+    v = v.reshape(b, h, nk, chunk_kv, dv)
+
+    q_pos_base = jnp.arange(chunk_q)
+    k_pos_base = jnp.arange(chunk_kv)
+
+    def q_block(qi, q_blk):
+        q_pos = base_q_pos + qi * chunk_q + q_pos_base  # [cq]
+
+        def kv_step(carry: _Carry, inputs):
+            ki, k_blk, v_blk = inputs
+            k_pos = ki * chunk_kv + k_pos_base  # [ck]
+            logits = (
+                jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk).astype(jnp.float32)
+                * scale
+            )
+            mask = jnp.ones((chunk_q, chunk_kv), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+
+            m_new = jnp.maximum(carry.m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(carry.m - m_new)
+            l_new = carry.l * alpha + p.sum(-1)
+            acc_new = carry.acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return _Carry(m_new, l_new, acc_new), None
+
+        init = _Carry(
+            m=jnp.full((b, h, chunk_q), NEG_INF, jnp.float32),
+            l=jnp.zeros((b, h, chunk_q), jnp.float32),
+            acc=jnp.zeros((b, h, chunk_q, dv), jnp.float32),
+        )
+        ks_idx = jnp.arange(nk)
+        carry, _ = jax.lax.scan(
+            kv_step,
+            init,
+            (ks_idx, jnp.moveaxis(k, 2, 0), jnp.moveaxis(v, 2, 0)),
+        )
+        return (carry.acc / jnp.maximum(carry.l, 1e-30)[..., None]).astype(q.dtype)
+
+    outs = []
+    for qi in range(nq):  # python loop: per-chunk static KV bounds
+        outs.append(q_block(qi, q[:, :, qi]))
+    out = jnp.stack(outs, axis=2)  # [B,H,nq,cq,Dv]
+    return out.reshape(b, h, sq, dv)
+
+
+def causal_block_skip_attention(q, k, v, *, window: int = 0, chunk_q=512, chunk_kv=512):
+    """§Perf variant: python-level per-q-chunk KV truncation (true skip).
+
+    For q-chunk qi only KV chunks [lo, hi] are touched: hi from causality,
+    lo from the sliding window.  This removes ~half the attention FLOPs for
+    causal training and all out-of-window work for SWA.
+    """
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    chunk_q = _pick_chunk(sq, chunk_q)
+    chunk_kv = _pick_chunk(skv, chunk_kv)
+    nq = sq // chunk_q
+    outs = []
+    for qi in range(nq):
+        q_blk = q[:, :, qi * chunk_q : (qi + 1) * chunk_q]
+        hi = (qi + 1) * chunk_q  # causal upper bound (exclusive)
+        lo = 0
+        if window:
+            lo = max(0, (qi * chunk_q - window) // chunk_kv * chunk_kv)
+        k_slc = k[:, :, lo:hi]
+        v_slc = v[:, :, lo:hi]
+        out = blockwise_attention(
+            q_blk,
+            k_slc,
+            v_slc,
+            causal=True,
+            window=window,
+            chunk_q=chunk_q,
+            chunk_kv=min(chunk_kv, hi - lo),
+            base_q_pos=qi * chunk_q - lo,
+        )
+        outs.append(out)
+    return jnp.concatenate(outs, axis=2)
+
+
+def decode_attention(
+    q: jax.Array,  # [B,H,1,D]
+    k_cache: jax.Array,  # [B,Hkv,S,D]
+    v_cache: jax.Array,  # [B,Hkv,S,D]
+    cur_len: jax.Array,  # [] current length (tokens valid in cache)
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """One-token attention over the cache.  Pure jnp: under pjit a cache
+    sharded along S lowers to partial softmax + psum automatically, giving
+    sequence-parallel decode."""
+    b, h, _, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k_cache = jnp.repeat(k_cache, rep, axis=1)
+        v_cache = jnp.repeat(v_cache, rep, axis=1)
+    scale = 1.0 / (d**0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    mask = pos[None, None, None, :] < cur_len
+    if window:
+        mask &= pos[None, None, None, :] >= cur_len - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v_cache.dtype), v_cache).astype(q.dtype)
+
+
+def mla_decode_attention(
+    params,
+    cfg: ModelConfig,
+    q_nope: jax.Array,  # [B,H,1,dh]
+    q_rope: jax.Array,  # [B,H,1,dr] (already rotated)
+    latent_cache: jax.Array,  # [B,S,r]
+    k_rope_cache: jax.Array,  # [B,S,dr] (already rotated)
+    cur_len: jax.Array,
+) -> jax.Array:
+    """Matrix-absorbed MLA decode: attention runs in latent space.
+
+    score_s = (W_uk^T q)^T . latent_s + q_rope . k_rope_s
+    out     = W_uv^T-proj of (sum_s p_s latent_s)
+
+    Per-token cost is O(S.r) instead of O(S.H.dh) with re-expansion —
+    the whole point of caching the 512-dim latent.
+    """
+    b, h, _, dh = q_nope.shape
+    r = cfg.kv_lora_rank
+    dr = cfg.qk_rope_dim
+    w_ku = params["k_up"]["w"].reshape(r, h, dh)  # [r,H,dh]
+    w_vu = params["v_up"]["w"].reshape(r, h, dh)
+    scale = 1.0 / ((dh + dr) ** 0.5)
+
+    q_lat = jnp.einsum("bhqd,rhd->bhqr", q_nope.astype(jnp.float32), w_ku.astype(jnp.float32))
+    logits = jnp.einsum("bhqr,bsr->bhqs", q_lat, latent_cache.astype(jnp.float32))
+    logits += jnp.einsum(
+        "bhqd,bsd->bhqs", q_rope.astype(jnp.float32), k_rope_cache.astype(jnp.float32)
+    )
+    logits *= scale
+    s = latent_cache.shape[1]
+    mask = jnp.arange(s)[None, None, None, :] < cur_len
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    ctx_lat = jnp.einsum("bhqs,bsr->bhqr", p, latent_cache.astype(jnp.float32))
+    out = jnp.einsum("bhqr,rhd->bhqd", ctx_lat, w_vu.astype(jnp.float32))
+    return out.astype(q_nope.dtype)
+
+
+def attention_block(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    block_skip: bool = False,
+) -> jax.Array:
+    """Full train/prefill attention sub-block (no residual/norm).
+
+    Uses the custom-VJP flash implementation: O(S·D) residuals instead of
+    per-block probability tensors.  ``block_skip`` prunes causally-dead KV
+    chunks at trace time (§Perf optimization; baseline keeps them)."""
+    from repro.models.flash import gqa_flash_attention
+
+    q, k, v, _ = qkv_project(params, cfg, x, positions)
+    window = cfg.window if cfg.attn_kind == "swa" else 0
+    out = gqa_flash_attention(
+        q,
+        k,
+        v,
+        causal=True,
+        window=window,
+        chunk_q=cfg.attn_chunk,
+        chunk_kv=cfg.attn_chunk,
+        skip=block_skip,
+    )
+    out = constrain(out, "dp", "tp", None, None)
+    return L.dense(params["o"], _merge_heads(out), compute_dtype=jnp.dtype(cfg.compute_dtype))

@@ -1,0 +1,105 @@
+"""Decode-time state: KV caches (bf16 or int8-quantized), MLA latent
+caches, and recurrent states (Mamba / xLSTM), structured per pattern
+position and stacked across scan groups.
+
+int8 KV quantization (per token-head symmetric scale) halves the cache
+footprint — this is what makes the biggest decode_32k cells fit HBM, and
+it ties directly into the paper's quantized-operator story.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# quantized KV storage
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jax.Array):
+    """[..., S, D] -> int8 values + f32 per-(…,S) scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -128, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# cache constructors — shapes only (ShapeDtypeStruct-compatible via
+# jax.eval_shape) so dryrun can build symbolic caches.
+# ---------------------------------------------------------------------------
+
+
+def make_attn_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict[str, Any]:
+    dh = cfg.head_dim_
+    if cfg.kv_lora_rank:
+        return {
+            "latent": jnp.zeros((batch, max_len, cfg.kv_lora_rank), jnp.dtype(cfg.kv_cache_dtype) if cfg.kv_cache_dtype != "int8" else jnp.bfloat16),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), jnp.bfloat16),
+        }
+    kvd = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.dtype(cfg.kv_cache_dtype)
+    cache = {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, max_len, dh), kvd),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, max_len, dh), kvd),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        cache["k_scale"] = jnp.zeros((batch, cfg.n_kv_heads, max_len, 1), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, cfg.n_kv_heads, max_len, 1), jnp.float32)
+    return cache
+
+
+def write_attn_cache(cfg: ModelConfig, cache: dict, k, v, mla_payload, pos):
+    """Insert keys/values (or MLA latent) at position(s) `pos` (scalar start
+    index; k/v cover [pos, pos+S))."""
+    if cfg.kv_lora_rank:
+        latent, k_rope = mla_payload
+        cache = dict(cache)
+        cache["latent"] = jax.lax.dynamic_update_slice(
+            cache["latent"], latent.astype(cache["latent"].dtype), (0, pos, 0)
+        )
+        cache["k_rope"] = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, pos, 0)
+        )
+        return cache
+    cache = dict(cache)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, pos, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, pos, 0))
+        cache["k_scale"] = jax.lax.dynamic_update_slice(
+            cache["k_scale"], ks, (0, 0, pos, 0)
+        )
+        cache["v_scale"] = jax.lax.dynamic_update_slice(
+            cache["v_scale"], vs, (0, 0, pos, 0)
+        )
+        return cache
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0)
+    )
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0)
+    )
+    return cache
+
+
+def read_attn_cache(cfg: ModelConfig, cache: dict, dtype=jnp.bfloat16):
+    """Return dequantized (k, v) or the MLA payload."""
+    if cfg.kv_lora_rank:
+        return cache["latent"], cache["k_rope"]
+    if cfg.kv_cache_dtype == "int8":
+        return (
+            dequantize_kv(cache["k"], cache["k_scale"], dtype),
+            dequantize_kv(cache["v"], cache["v_scale"], dtype),
+        )
+    return cache["k"], cache["v"]

@@ -1,0 +1,131 @@
+"""Shared layers: norm, RoPE, dense (with scheduled-kernel routing),
+SwiGLU MLP, embedding.  Functional style: ``init_*`` build param pytrees,
+apply functions are pure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# dense — every model GEMM funnels through here so the paper's scheduled
+# kernels apply framework-wide when a policy is active.
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x: jax.Array, *, compute_dtype=None) -> jax.Array:
+    w = params["w"]
+    b = params.get("b")
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        w = w.astype(compute_dtype)
+
+    from repro.kernels import policy as kpolicy
+
+    pol = kpolicy.get_policy()
+    if pol is not None:
+        m = 1
+        for s in x.shape[:-1]:
+            m *= s
+        cfg = pol.config_for(
+            m, x.shape[-1], w.shape[-1], x.dtype, has_bias=b is not None
+        )
+        if cfg is not None:
+            from repro.kernels import ops as kops
+
+            return kops.matmul(x, w, cfg, b)
+
+    out = x @ w
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float = 10000.0):
+    """cos/sin tables for given positions: [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, D]; cos/sin broadcastable [..., S, D//2] (split halves)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos.astype(x1.dtype)
+    sin = sin.astype(x1.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "gelu":
+        return {
+            "up": init_dense(k1, d_model, d_ff, bias=True, dtype=dtype),
+            "down": init_dense(k2, d_ff, d_model, bias=True, dtype=dtype),
+        }
+    return {
+        "gate": init_dense(k1, d_model, d_ff, dtype=dtype),
+        "up": init_dense(k2, d_model, d_ff, dtype=dtype),
+        "down": init_dense(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp(params, x: jax.Array, *, compute_dtype=None) -> jax.Array:
+    u = dense(params["up"], x, compute_dtype=compute_dtype)
+    if "gate" in params:
+        g = dense(params["gate"], x, compute_dtype=compute_dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+    else:
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(u.dtype)
+    return dense(params["down"], h, compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed(params, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def unembed(params, x: jax.Array, *, compute_dtype=None) -> jax.Array:
+    t = params["table"]
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        t = t.astype(compute_dtype)
+    return x @ t.T

@@ -1,0 +1,408 @@
+"""LM assembly: embedding -> pattern-grouped blocks (scanned) -> norm -> head.
+
+Layers are organized as ``n_groups`` repeats of ``cfg.pattern`` (a tuple of
+block kinds); parameters of the repeats are stacked and the forward pass is
+a ``lax.scan`` over groups, keeping HLO size O(pattern) instead of
+O(n_layers) — essential for compiling 60-88 layer models against a
+512-device mesh.  DeepSeek-style "first k layers dense" live outside the
+scan as prefix layers.
+
+Three entry points mirror the shape cells: ``forward`` (train),
+``prefill`` (build caches + logits), ``decode_step`` (one token).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import cache as C
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _position_is_moe(cfg: ModelConfig, pos: int) -> bool:
+    m = cfg.moe
+    if m is None:
+        return False
+    p = len(cfg.pattern)
+    assert p % m.every == 0 or m.every % p == 0 or m.every == 1, (
+        "MoE periodicity must align with the pattern for scan stacking"
+    )
+    return pos >= m.offset and (pos - m.offset) % m.every == 0
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str, is_moe: bool, dtype):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": L.init_rmsnorm(cfg.d_model, dtype)}
+    if kind == "attn":
+        p["block"] = A.init_attention(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["block"] = S.init_mamba(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["block"] = X.init_mlstm(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["block"] = X.init_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if is_moe:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dtype)
+        p["ffn"] = M.init_moe(ks[1], cfg, dtype)
+    elif cfg.d_ff:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dtype)
+        p["ffn"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype, kind=cfg.mlp_kind)
+    return p
+
+
+def n_prefix_layers(cfg: ModelConfig) -> int:
+    return cfg.moe.first_dense if cfg.moe else 0
+
+
+def n_scan_groups(cfg: ModelConfig) -> int:
+    n = cfg.n_layers - n_prefix_layers(cfg)
+    p = len(cfg.pattern)
+    assert n % p == 0, (cfg.name, n, p)
+    return n // p
+
+
+def init_lm(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_prefix, k_groups, k_head = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": L.init_embedding(k_embed, cfg.vocab, cfg.d_model, dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.init_dense(k_head, cfg.d_model, cfg.vocab, dtype=dtype)
+
+    # prefix (dense) layers — attention + dense MLP, unstacked
+    prefix = []
+    pk = jax.random.split(k_prefix, max(n_prefix_layers(cfg), 1))
+    for i in range(n_prefix_layers(cfg)):
+        prefix.append(_init_layer(pk[i], cfg, cfg.layer_kind(i), False, dtype))
+    params["prefix"] = prefix
+
+    # scanned groups — stacked along axis 0
+    ng = n_scan_groups(cfg)
+    gks = jax.random.split(k_groups, ng)
+
+    def one_group(gkey):
+        pks = jax.random.split(gkey, len(cfg.pattern))
+        return {
+            f"pos{p}": _init_layer(
+                pks[p], cfg, cfg.pattern[p], _position_is_moe(cfg, p), dtype
+            )
+            for p in range(len(cfg.pattern))
+        }
+
+    groups = [one_group(gks[g]) for g in range(ng)]
+    params["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / eval)
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer_train(
+    lp, cfg: ModelConfig, kind: str, is_moe: bool, x, positions, *, block_skip=False
+):
+    h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        y = A.attention_block(lp["block"], cfg, h, positions, block_skip=block_skip)
+    elif kind == "mamba":
+        y, _ = S.mamba_block(lp["block"], cfg, h)
+    elif kind == "mlstm":
+        y = X.mlstm_block(lp["block"], cfg, h)
+    elif kind == "slstm":
+        y, _ = X.slstm_block(lp["block"], cfg, h)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if "ffn" in lp:
+        h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if is_moe:
+            f, aux = M.moe_ffn(lp["ffn"], cfg, h2)
+        else:
+            f = L.mlp(lp["ffn"], h2, compute_dtype=jnp.dtype(cfg.compute_dtype))
+        x = x + f
+    return x, aux
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, frontend_embeds):
+    from repro.parallel.policy import constrain
+
+    x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.frontend and frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, "dp", "boundary", None)  # batch on data + Megatron-SP seq shard
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    return x, positions
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    frontend_embeds: jax.Array | None = None,
+    *,
+    block_skip: bool = False,
+):
+    """tokens [B, S] (+ frontend embeds [B, Nf, d]) -> (logits, aux_loss)."""
+    x, positions = _embed_inputs(params, cfg, tokens, frontend_embeds)
+
+    for i, lp in enumerate(params["prefix"]):
+        x, _ = _apply_layer_train(
+            lp, cfg, cfg.layer_kind(i), False, x, positions, block_skip=block_skip
+        )
+
+    pattern = cfg.pattern
+
+    from repro.parallel.policy import constrain
+
+    def group_body(carry, gp):
+        x, aux = carry
+        x = constrain(x, "dp", "boundary", None)
+        for p, kind in enumerate(pattern):
+            x, a = _apply_layer_train(
+                gp[f"pos{p}"],
+                cfg,
+                kind,
+                _position_is_moe(cfg, p),
+                x,
+                positions,
+                block_skip=block_skip,
+            )
+            x = constrain(x, "dp", "boundary", None)
+            aux = aux + a
+        return (x, aux), None
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["groups"])
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x, compute_dtype=jnp.dtype(cfg.compute_dtype))
+    else:
+        logits = L.dense(params["head"], x, compute_dtype=jnp.dtype(cfg.compute_dtype))
+    logits = constrain(logits, "dp", None, "tp")
+    return logits.astype(jnp.float32), aux
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _empty_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind == "attn":
+        return C.make_attn_cache(cfg, batch, max_len)
+    if kind == "mamba":
+        return S.init_mamba_state(cfg, batch, jnp.dtype(cfg.compute_dtype))._asdict()
+    if kind == "mlstm":
+        return X.init_mlstm_state(cfg, batch)._asdict()
+    if kind == "slstm":
+        return X.init_slstm_state(cfg, batch)._asdict()
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Allocate the full decode cache pytree (prefix + stacked groups)."""
+    prefix = [
+        _empty_layer_cache(cfg, cfg.layer_kind(i), batch, max_len)
+        for i in range(n_prefix_layers(cfg))
+    ]
+    one_group = {
+        f"pos{p}": _empty_layer_cache(cfg, kind, batch, max_len)
+        for p, kind in enumerate(cfg.pattern)
+    }
+    ng = n_scan_groups(cfg)
+    groups = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (ng, *x.shape)).copy(), one_group
+    )
+    return {"prefix": prefix, "groups": groups, "len": jnp.zeros((), jnp.int32)}
+
+
+def _apply_layer_prefill(lp, cfg, kind, is_moe, x, positions, lcache, start):
+    """Like train apply, but fills the layer cache.  start = write offset."""
+    h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if kind == "attn":
+        q, k, v, mla = A.qkv_project(lp["block"], cfg, h, positions)
+        window = cfg.window if cfg.attn_kind == "swa" else 0
+        out = A.blockwise_attention(
+            q, k, v, causal=True, window=window,
+            chunk_q=cfg.attn_chunk, chunk_kv=cfg.attn_chunk,
+        )
+        y = L.dense(lp["block"]["o"], A._merge_heads(out), compute_dtype=jnp.dtype(cfg.compute_dtype))
+        lcache = C.write_attn_cache(cfg, lcache, k, v, mla, start)
+    elif kind == "mamba":
+        y, st = S.mamba_block(lp["block"], cfg, h, S.MambaState(**lcache))
+        lcache = st._asdict()
+    elif kind == "mlstm":
+        y, st = X.mlstm_prefill(
+            lp["block"], cfg, h, X.MLSTMState(**lcache), chunk=cfg.attn_chunk
+        )
+        lcache = st._asdict()
+    elif kind == "slstm":
+        y, st = X.slstm_block(lp["block"], cfg, h, X.SLSTMState(**lcache))
+        lcache = st._asdict()
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if "ffn" in lp:
+        h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if is_moe:
+            f, _ = M.moe_ffn(lp["ffn"], cfg, h2)
+        else:
+            f = L.mlp(lp["ffn"], h2, compute_dtype=jnp.dtype(cfg.compute_dtype))
+        x = x + f
+    return x, lcache
+
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    cache,
+    frontend_embeds: jax.Array | None = None,
+):
+    """Run the prompt, filling `cache` (built by init_cache).  Returns
+    (last-position logits, cache)."""
+    x, positions = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    start = cache["len"]
+
+    new_prefix = []
+    for i, lp in enumerate(params["prefix"]):
+        x, lc = _apply_layer_prefill(
+            lp, cfg, cfg.layer_kind(i), False, x, positions,
+            cache["prefix"][i], start,
+        )
+        new_prefix.append(lc)
+
+    pattern = cfg.pattern
+    from repro.parallel.policy import constrain
+
+    def group_body(x, inp):
+        gp, gcache = inp
+        x = constrain(x, "dp", "boundary", None)
+        for p, kind in enumerate(pattern):
+            x, lc = _apply_layer_prefill(
+                gp[f"pos{p}"], cfg, kind, _position_is_moe(cfg, p),
+                x, positions, gcache[f"pos{p}"], start,
+            )
+            x = constrain(x, "dp", "boundary", None)
+            gcache = {**gcache, f"pos{p}": lc}
+        return x, gcache
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    x, new_groups = jax.lax.scan(body, x, (params["groups"], cache["groups"]))
+
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x, compute_dtype=jnp.dtype(cfg.compute_dtype))
+    else:
+        logits = L.dense(params["head"], x, compute_dtype=jnp.dtype(cfg.compute_dtype))
+    new_cache = {
+        "prefix": new_prefix,
+        "groups": new_groups,
+        "len": start + positions.shape[0],
+    }
+    return logits.astype(jnp.float32), new_cache
+
+
+def _apply_layer_decode(lp, cfg, kind, is_moe, x, lcache, cur_len):
+    """One-token step.  x [B,1,d]; cur_len = tokens already in cache."""
+    h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    compute = jnp.dtype(cfg.compute_dtype)
+    if kind == "attn":
+        positions = cur_len[None]  # this token's position
+        q, k, v, mla = A.qkv_project(lp["block"], cfg, h, positions)
+        lcache = C.write_attn_cache(cfg, lcache, k, v, mla, cur_len)
+        window = cfg.window if cfg.attn_kind == "swa" else 0
+        if cfg.kv_lora_rank:
+            dh = cfg.head_dim_
+            q_nope, q_rope = q[..., :dh], q[..., dh:]
+            out = A.mla_decode_attention(
+                lp["block"], cfg, q_nope, q_rope,
+                lcache["latent"], lcache["k_rope"], cur_len + 1,
+            )
+        else:
+            kc, vc = C.read_attn_cache(cfg, lcache, compute)
+            out = A.decode_attention(q, kc, vc, cur_len + 1, window=window)
+        y = L.dense(lp["block"]["o"], A._merge_heads(out), compute_dtype=compute)
+    elif kind == "mamba":
+        y, st = S.mamba_decode_step(lp["block"], cfg, h, S.MambaState(**lcache))
+        lcache = st._asdict()
+    elif kind == "mlstm":
+        y, st = X.mlstm_decode_step(lp["block"], cfg, h, X.MLSTMState(**lcache))
+        lcache = st._asdict()
+    elif kind == "slstm":
+        y, st = X.slstm_decode_step(lp["block"], cfg, h, X.SLSTMState(**lcache))
+        lcache = st._asdict()
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if "ffn" in lp:
+        h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if is_moe:
+            f, _ = M.moe_ffn(lp["ffn"], cfg, h2)
+        else:
+            f = L.mlp(lp["ffn"], h2, compute_dtype=compute)
+        x = x + f
+    return x, lcache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token: jax.Array):
+    """token [B, 1] -> (logits [B,1,V], updated cache)."""
+    cur_len = cache["len"]
+    x = L.embed(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
+
+    new_prefix = []
+    for i, lp in enumerate(params["prefix"]):
+        x, lc = _apply_layer_decode(
+            lp, cfg, cfg.layer_kind(i), False, x, cache["prefix"][i], cur_len
+        )
+        new_prefix.append(lc)
+
+    pattern = cfg.pattern
+    from repro.parallel.policy import constrain
+
+    def group_body(x, inp):
+        gp, gcache = inp
+        x = constrain(x, "dp", "boundary", None)
+        for p, kind in enumerate(pattern):
+            x, lc = _apply_layer_decode(
+                gp[f"pos{p}"], cfg, kind, _position_is_moe(cfg, p),
+                x, gcache[f"pos{p}"], cur_len,
+            )
+            gcache = {**gcache, f"pos{p}": lc}
+        return x, gcache
+
+    x, new_groups = jax.lax.scan(group_body, x, (params["groups"], cache["groups"]))
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x, compute_dtype=jnp.dtype(cfg.compute_dtype))
+    else:
+        logits = L.dense(params["head"], x, compute_dtype=jnp.dtype(cfg.compute_dtype))
+    new_cache = {"prefix": new_prefix, "groups": new_groups, "len": cur_len + 1}
+    return logits.astype(jnp.float32), new_cache

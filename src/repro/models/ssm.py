@@ -1,0 +1,147 @@
+"""Mamba (selective SSM) block — Jamba's recurrent layer.
+
+Train/prefill uses a chunked selective scan: ``lax.scan`` over sequence
+chunks carrying the SSM state h [B, d_in, d_state]; inside a chunk the
+recurrence h_t = a_t * h_{t-1} + b_t is evaluated with an associative scan,
+bounding peak memory to O(chunk * d_in * d_state) instead of O(S * ...).
+Decode carries h explicitly — O(1) per token, which is what makes the
+long_500k cell feasible for the SSM/hybrid archs.
+
+The selective-scan itself is elementwise/scan work (not a GEMM): it lowers
+through XLA.  The paper's scheduler covers the surrounding projections
+(in/out/x/dt), which dominate FLOPs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import MambaConfig, ModelConfig
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    mc = cfg.mamba or MambaConfig()
+    return mc.dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32):
+    mc = cfg.mamba or MambaConfig()
+    d = cfg.d_model
+    d_in = mc.expand * d
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": L.init_dense(ks[0], d, 2 * d_in, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (mc.d_conv, d_in)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": L.init_dense(ks[2], d_in, dtr + 2 * mc.d_state, dtype=dtype),
+        "dt_proj": L.init_dense(ks[3], dtr, d_in, bias=True, dtype=dtype),
+        "A_log": jnp.log(
+            jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (d_in, 1))
+        ).astype(jnp.float32),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": L.init_dense(ks[4], d_in, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state=None):
+    """Depthwise causal conv along S: x [B,S,Din], w [K,Din].
+
+    Returns (y, new_state) where state is the trailing K-1 inputs."""
+    ksz = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], ksz - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(ksz)
+    )
+    new_state = xp[:, -(ksz - 1) :] if ksz > 1 else state
+    return y + b[None, None, :], new_state
+
+
+class MambaState(NamedTuple):
+    h: jax.Array  # [B, d_in, d_state]
+    conv: jax.Array  # [B, K-1, d_in]
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    mc = cfg.mamba or MambaConfig()
+    d_in = mc.expand * cfg.d_model
+    return MambaState(
+        h=jnp.zeros((batch, d_in, mc.d_state), jnp.float32),
+        conv=jnp.zeros((batch, mc.d_conv - 1, d_in), dtype),
+    )
+
+
+def _ssm_params(params, cfg: ModelConfig, u: jax.Array):
+    """u [B,S,d_in] -> (dA [B,S,d_in,n], dBu [B,S,d_in,n], C [B,S,n])."""
+    mc = cfg.mamba or MambaConfig()
+    dtr = _dt_rank(cfg)
+    proj = L.dense(params["x_proj"], u)  # [B,S,dtr+2n]
+    dt, bmat, cmat = jnp.split(proj, [dtr, dtr + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(L.dense(params["dt_proj"], dt).astype(jnp.float32))  # [B,S,d_in]
+    a = -jnp.exp(params["A_log"])  # [d_in, n]
+    dA = jnp.exp(dt[..., None] * a[None, None])  # [B,S,d_in,n]
+    dBu = (dt * u.astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[:, :, None, :]
+    return dA, dBu, cmat.astype(jnp.float32)
+
+
+def _scan_chunk(h0, dA, dBu):
+    """Associative scan of h_t = dA_t h_{t-1} + dBu_t within a chunk.
+
+    h0 [B,d_in,n]; dA/dBu [B,c,d_in,n] -> h over chunk, final h."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    h = a_cum * h0[:, None] + b_cum
+    return h, h[:, -1]
+
+
+def mamba_block(params, cfg: ModelConfig, x: jax.Array, state: MambaState | None = None):
+    """x [B,S,d] -> (y [B,S,d], final MambaState).  Chunked over S."""
+    mc = cfg.mamba or MambaConfig()
+    b, s, d = x.shape
+    compute = jnp.dtype(cfg.compute_dtype)
+    xz = L.dense(params["in_proj"], x, compute_dtype=compute)
+    u, z = jnp.split(xz, 2, axis=-1)  # [B,S,d_in] each
+    conv_state = state.conv if state is not None else None
+    u, conv_state = _causal_conv(u, params["conv_w"].astype(compute), params["conv_b"].astype(compute), conv_state)
+    u = jax.nn.silu(u)
+
+    h0 = state.h if state is not None else jnp.zeros((b, u.shape[-1], mc.d_state), jnp.float32)
+
+    chunk = min(mc.chunk, s)
+    if s % chunk:
+        chunk = s  # fallback: single chunk for odd smoke shapes
+    nc = s // chunk
+
+    # SSM parameters (dA/dBu: [B, c, d_in, n]) are computed *inside* each
+    # chunk step and the step is checkpointed: the whole-sequence tensor
+    # would be O(S * d_in * n) floats (terabytes at jamba train_4k scale).
+    def step(h, u_c):
+        dA_c, dBu_c, c_c = _ssm_params(params, cfg, u_c)
+        h_seq, h_last = _scan_chunk(h, dA_c, dBu_c)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_seq, c_c)  # [B,c,d_in]
+        y_c = y_c + params["D"][None, None] * u_c.astype(jnp.float32)
+        return h_last, y_c
+
+    u_c = u.reshape(b, nc, chunk, -1).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(jax.checkpoint(step, prevent_cse=False), h0, u_c)
+    y = ys.swapaxes(0, 1).reshape(b, s, -1)
+
+    y = y.astype(compute) * jax.nn.silu(z.astype(jnp.float32)).astype(compute)
+    out = L.dense(params["out_proj"], y, compute_dtype=compute)
+    return out.astype(x.dtype), MambaState(h=h_last, conv=conv_state)
+
+
+def mamba_decode_step(params, cfg: ModelConfig, x: jax.Array, state: MambaState):
+    """Single-token step: x [B,1,d] -> (y [B,1,d], new state).  O(1) in S."""
+    return mamba_block(params, cfg, x, state)

@@ -1,0 +1,268 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent gate connections, strictly sequential).
+
+mLSTM train/prefill uses the quadratic parallel form (decay-masked
+attention-like product, chunked like blockwise attention); decode updates
+the matrix memory C [B, H, d, d] in O(1) per token — the xlstm-125m
+long_500k cell runs through this path.  sLSTM is a lax.scan over time with
+exponential-gating stabilizer state.
+
+Gate/projection GEMMs route through the paper's scheduler (via
+layers.dense); the recurrences themselves are elementwise — XLA territory,
+noted in DESIGN §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, XLSTMConfig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    xc = cfg.xlstm or XLSTMConfig()
+    d = cfg.d_model
+    d_in = int(xc.proj_factor * d)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": L.init_dense(ks[0], d, 2 * d_in, dtype=dtype),
+        "q": L.init_dense(ks[1], d_in, d_in, dtype=dtype),
+        "k": L.init_dense(ks[2], d_in, d_in, dtype=dtype),
+        "v": L.init_dense(ks[3], d_in, d_in, dtype=dtype),
+        "i_gate": L.init_dense(ks[4], d_in, cfg.n_heads, bias=True, dtype=dtype),
+        "f_gate": L.init_dense(ks[5], d_in, cfg.n_heads, bias=True, dtype=dtype),
+        "o_gate": L.init_dense(ks[6], d_in, d_in, bias=True, dtype=dtype),
+        "down": L.init_dense(ks[7], d_in, d, dtype=dtype),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, dh, dh] matrix memory
+    n: jax.Array  # [B, H, dh] normalizer
+    m: jax.Array  # [B, H] gate stabilizer
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    xc = cfg.xlstm or XLSTMConfig()
+    d_in = int(xc.proj_factor * cfg.d_model)
+    dh = d_in // cfg.n_heads
+    return MLSTMState(
+        c=jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, cfg.n_heads, dh), jnp.float32),
+        m=jnp.zeros((batch, cfg.n_heads), jnp.float32),
+    )
+
+
+def _heads(x, h):
+    b, s, _ = x.shape
+    return x.reshape(b, s, h, -1).transpose(0, 2, 1, 3)  # [B,H,S,dh]
+
+
+def mlstm_parallel(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Parallel (training) form over the full sequence.
+
+    y_t = o_t * (sum_{s<=t} D_ts q_t.k_s v_s) / norm, with log-decay matrix
+    D from cumulative forget gates — evaluated per chunk to bound memory.
+    """
+    h = cfg.n_heads
+    compute = jnp.dtype(cfg.compute_dtype)
+    up = L.dense(params["up"], x, compute_dtype=compute)
+    u, z = jnp.split(up, 2, axis=-1)
+    q = _heads(L.dense(params["q"], u, compute_dtype=compute), h)
+    k = _heads(L.dense(params["k"], u, compute_dtype=compute), h)
+    v = _heads(L.dense(params["v"], u, compute_dtype=compute), h)
+    b, _, s, dh = q.shape
+    k = k / (dh**0.5)
+
+    i_log = L.dense(params["i_gate"], u).astype(jnp.float32).transpose(0, 2, 1)  # [B,H,S]
+    f_log = jax.nn.log_sigmoid(
+        L.dense(params["f_gate"], u).astype(jnp.float32)
+    ).transpose(0, 2, 1)
+
+    fcum = jnp.cumsum(f_log, axis=-1)  # [B,H,S]
+    # log decay from s->t: fcum_t - fcum_s + i_s   (t >= s)
+    logd = fcum[..., :, None] - fcum[..., None, :] + i_log[..., None, :]
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    logd = jnp.where(tri[None, None], logd, -jnp.inf)
+    m = jnp.max(logd, axis=-1, keepdims=True)  # stabilizer
+    m = jnp.maximum(m, 0.0)
+    d = jnp.exp(logd - m)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * d
+    norm = jnp.maximum(jnp.abs(scores.sum(-1)), jnp.exp(-m[..., 0]))[..., None]
+    y = jnp.einsum("bhqk,bhkd->bhqd", (scores / norm).astype(v.dtype), v)
+
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    o = jax.nn.sigmoid(L.dense(params["o_gate"], u).astype(jnp.float32)).astype(compute)
+    out = L.dense(params["down"], y.astype(compute) * o * jax.nn.silu(z.astype(jnp.float32)).astype(compute), compute_dtype=compute)
+    return out.astype(x.dtype)
+
+
+def _mlstm_chunk_scan(params, cfg: ModelConfig, x: jax.Array, state: MLSTMState, chunk: int):
+    """lax.scan over uniform chunks: compact HLO (the unrolled python loop
+    made 32k-prefill compiles explode) + per-chunk checkpointing."""
+    b, s, d = x.shape
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).swapaxes(0, 1)  # [nc, B, c, d]
+
+    def step(st, x_chunk):
+        y, st2 = _mlstm_chunk_recurrent(params, cfg, x_chunk, st)
+        return st2, y
+
+    state, ys = jax.lax.scan(
+        jax.checkpoint(step, prevent_cse=False), state, xc
+    )
+    return ys.swapaxes(0, 1).reshape(b, s, -1), state
+
+
+def mlstm_block(params, cfg: ModelConfig, x: jax.Array, *, chunk: int = 0):
+    """Chunk the parallel form over S (memory O(chunk^2)) carrying the
+    recurrent (C, n, m) state across chunks."""
+    s = x.shape[1]
+    chunk = chunk or min(cfg.attn_chunk, s)
+    if s <= chunk or s % chunk:
+        return mlstm_parallel(params, cfg, x)
+    state = init_mlstm_state(cfg, x.shape[0])
+    y, _ = _mlstm_chunk_scan(params, cfg, x, state, chunk)
+    return y
+
+
+def _mlstm_chunk_recurrent(params, cfg: ModelConfig, x, state: MLSTMState):
+    """Process one chunk: intra-chunk parallel + cross-chunk state carry."""
+    h = cfg.n_heads
+    compute = jnp.dtype(cfg.compute_dtype)
+    up = L.dense(params["up"], x, compute_dtype=compute)
+    u, z = jnp.split(up, 2, axis=-1)
+    q = _heads(L.dense(params["q"], u, compute_dtype=compute), h)
+    k = _heads(L.dense(params["k"], u, compute_dtype=compute), h)
+    v = _heads(L.dense(params["v"], u, compute_dtype=compute), h)
+    b, _, s, dh = q.shape
+    k = k / (dh**0.5)
+
+    i_log = L.dense(params["i_gate"], u).astype(jnp.float32).transpose(0, 2, 1)
+    f_log = jax.nn.log_sigmoid(L.dense(params["f_gate"], u).astype(jnp.float32)).transpose(0, 2, 1)
+    fcum = jnp.cumsum(f_log, axis=-1)
+
+    # intra-chunk decay
+    logd = fcum[..., :, None] - fcum[..., None, :] + i_log[..., None, :]
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    logd = jnp.where(tri[None, None], logd, -jnp.inf)
+    # inter-chunk: contribution of carried state decayed to each position
+    logc = fcum + state.m[..., None]  # [B,H,S]
+
+    m_intra = jnp.max(logd, axis=-1)
+    m_tot = jnp.maximum(jnp.maximum(m_intra, logc), 0.0)  # [B,H,S]
+    d_intra = jnp.exp(logd - m_tot[..., None])
+    d_carry = jnp.exp(logc - m_tot)  # [B,H,S]
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * d_intra
+    num_carry = jnp.einsum("bhsd,bhde->bhse", q.astype(jnp.float32), state.c) * d_carry[..., None]
+    den_carry = jnp.einsum("bhsd,bhd->bhs", q.astype(jnp.float32), state.n) * d_carry
+    num = jnp.einsum("bhqk,bhkd->bhqd", scores, v.astype(jnp.float32)) + num_carry
+    den = scores.sum(-1) + den_carry
+    norm = jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))[..., None]
+    y = (num / norm).astype(compute)
+
+    # state update to end of chunk
+    f_tot = fcum[..., -1]  # [B,H]
+    m_new = jnp.maximum(f_tot + state.m, jnp.max(i_log + fcum[..., -1:] - fcum, axis=-1))
+    decay_state = jnp.exp(f_tot + state.m - m_new)
+    kv_w = jnp.exp(i_log + fcum[..., -1:] - fcum - m_new[..., None])  # [B,H,S]
+    c_new = state.c * decay_state[..., None, None] + jnp.einsum(
+        "bhsd,bhse,bhs->bhde", k.astype(jnp.float32), v.astype(jnp.float32), kv_w
+    )
+    n_new = state.n * decay_state[..., None] + jnp.einsum(
+        "bhsd,bhs->bhd", k.astype(jnp.float32), kv_w
+    )
+
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    o = jax.nn.sigmoid(L.dense(params["o_gate"], u).astype(jnp.float32)).astype(compute)
+    out = L.dense(params["down"], y * o * jax.nn.silu(z.astype(jnp.float32)).astype(compute), compute_dtype=compute)
+    return out.astype(x.dtype), MLSTMState(c=c_new, n=n_new, m=m_new)
+
+
+def mlstm_decode_step(params, cfg: ModelConfig, x, state: MLSTMState):
+    """One token [B,1,d]: O(1) matrix-memory update."""
+    return _mlstm_chunk_recurrent(params, cfg, x, state)
+
+
+def mlstm_prefill(params, cfg: ModelConfig, x, state: MLSTMState, *, chunk: int = 512):
+    """Chunked prefill carrying the matrix memory (memory O(chunk^2))."""
+    s = x.shape[1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        return _mlstm_chunk_recurrent(params, cfg, x, state)
+    return _mlstm_chunk_scan(params, cfg, x, state, chunk)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    scale = (1.0 / d) ** 0.5
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 4 * d)) * scale).astype(dtype),
+        "r": (jax.random.normal(ks[1], (d, 4 * d)) * scale).astype(dtype),
+        "b": jnp.zeros((4 * d,), dtype),
+        "out": L.init_dense(ks[2], d, d, dtype=dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # [B, d]
+    n: jax.Array  # [B, d]
+    h: jax.Array  # [B, d]
+    m: jax.Array  # [B, d] stabilizer
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=z)
+
+
+def _slstm_step(params, x_t, st: SLSTMState) -> SLSTMState:
+    gates = (
+        x_t.astype(jnp.float32) @ params["w_in"].astype(jnp.float32)
+        + st.h @ params["r"].astype(jnp.float32)
+        + params["b"].astype(jnp.float32)
+    )
+    i_t, f_t, z_t, o_t = jnp.split(gates, 4, axis=-1)
+    m_new = jnp.maximum(f_t + st.m, i_t)
+    i_ = jnp.exp(i_t - m_new)
+    f_ = jnp.exp(f_t + st.m - m_new)
+    c_new = f_ * st.c + i_ * jnp.tanh(z_t)
+    n_new = f_ * st.n + i_
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def slstm_block(params, cfg: ModelConfig, x: jax.Array, state: SLSTMState | None = None):
+    """x [B,S,d] -> (y [B,S,d], final state); lax.scan over time."""
+    b, s, d = x.shape
+    st = state or init_slstm_state(cfg, b)
+
+    def step(st, x_t):
+        new = _slstm_step(params, x_t, st)
+        return new, new.h
+
+    st, hs = jax.lax.scan(step, st, x.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    return L.dense(params["out"], y, compute_dtype=jnp.dtype(cfg.compute_dtype)).astype(x.dtype), st
+
+
+def slstm_decode_step(params, cfg: ModelConfig, x, state: SLSTMState):
+    return slstm_block(params, cfg, x, state)

@@ -1,0 +1,15 @@
+from repro.parallel.sharding import (
+    batch_spec,
+    cache_specs,
+    logits_spec,
+    opt_state_specs,
+    param_specs,
+)
+
+__all__ = [
+    "param_specs",
+    "opt_state_specs",
+    "batch_spec",
+    "cache_specs",
+    "logits_spec",
+]

@@ -1,0 +1,88 @@
+"""Activation-sharding policy: explicit GSPMD constraints at key points.
+
+Without these, sharding propagation can pick a parameter-centric layout
+(e.g. the FSDP dim of the embedding table) and carry a *replicated batch*
+through the whole model — observed as 12 GiB logits buffers with the
+global batch unsharded.  The launcher installs a policy describing the
+mesh's dp/tp axes; model code calls ``constrain`` at the few points that
+anchor propagation (embed output, scan carries, MoE buffers, logits).
+
+No-op when no policy is installed (single-device tests/examples).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_lock = threading.Lock()
+_POLICY: "ActivationPolicy | None" = None
+
+
+@dataclass(frozen=True)
+class ActivationPolicy:
+    dp: tuple[str, ...]  # data-parallel axes ("pod","data") or ("data",)
+    tp: str  # tensor-parallel axis name
+    dp_size: int
+    tp_size: int
+    # layer-boundary residual-stream sharding: "seq" = Megatron-SP style
+    # (S over model between blocks), "none" = batch-only (§Perf knob)
+    boundary: str = "seq"
+
+
+def install(mesh, *, boundary: str = "seq") -> ActivationPolicy:
+    from repro.parallel.sharding import dp_axes
+
+    dp = tuple(dp_axes(mesh))
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    pol = ActivationPolicy(
+        dp=dp,
+        tp="model",
+        dp_size=dp_size,
+        tp_size=mesh.shape.get("model", 1),
+        boundary=boundary,
+    )
+    set_policy(pol)
+    return pol
+
+
+def set_policy(p: ActivationPolicy | None) -> None:
+    global _POLICY
+    with _lock:
+        _POLICY = p
+
+
+def get_policy() -> ActivationPolicy | None:
+    return _POLICY
+
+
+def constrain(x: jax.Array, *dims: str | None) -> jax.Array:
+    """Apply a sharding constraint described symbolically.
+
+    dims entries: "dp" (data axes), "tp" (model axis), "boundary" (model
+    axis iff the policy's boundary mode is "seq"), None (replicated).
+    Axes that do not divide the corresponding dimension are dropped.
+    """
+    pol = get_policy()
+    if pol is None:
+        return x
+    spec = []
+    for dim_size, d in zip(x.shape, dims):
+        if d == "boundary":
+            d = "tp" if pol.boundary == "seq" else None
+        if d == "dp" and dim_size % pol.dp_size == 0:
+            spec.append(pol.dp)
+        elif d == "tp" and dim_size % pol.tp_size == 0:
+            spec.append(pol.tp)
+        else:
+            spec.append(None)
+    spec.extend([None] * (x.ndim - len(spec)))
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x  # no mesh context (plain jit): constraint is advisory

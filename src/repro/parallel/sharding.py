@@ -1,0 +1,226 @@
+"""Sharding rules: parameter / optimizer / activation PartitionSpecs.
+
+Parallelism map (see DESIGN §5):
+  * ``model`` axis — tensor parallelism: attention heads, d_ff, vocab,
+    MoE experts (expert parallelism when E divides the axis, else TP
+    inside each expert).
+  * ``data`` (+ ``pod``) axes — batch data parallelism; with
+    ``fsdp=True`` parameters/optimizer state are *also* sharded over the
+    data axes on a non-TP dimension (ZeRO-3 style storage; GSPMD inserts
+    per-layer all-gathers inside the scan).
+  * decode caches shard batch over data and heads over model when the KV
+    head count divides the axis, otherwise the *sequence* dim shards over
+    model (sequence-parallel decode attention: partial softmax + psum,
+    inserted automatically by GSPMD from the jnp decode path).
+
+Every rule checks divisibility against the actual mesh axis sizes and
+falls back to replication per-dimension, so any mesh shape that factors
+(pod, data, model) works — the elastic-resume path re-derives specs for
+whatever device count is available.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axsize(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axsize(mesh, n)
+        return out
+    return mesh.shape.get(name, 1)
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel meta-axis: ('pod','data') on multi-pod meshes."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _div(dim: int, mesh: Mesh, ax) -> Any:
+    """Return ax if dim is divisible by its size (else None = replicate)."""
+    return ax if dim % max(_axsize(mesh, ax), 1) == 0 and dim > 0 else None
+
+
+def _spec2(mesh, shape, ax0, ax1) -> P:
+    return P(_div(shape[0], mesh, ax0), _div(shape[1], mesh, ax1))
+
+
+def param_specs(cfg: ModelConfig, params, mesh: Mesh, *, fsdp: bool = True):
+    """PartitionSpec pytree matching `params` (init_lm layout)."""
+    dp = tuple(dp_axes(mesh)) if fsdp else None
+    tp = "model"
+
+    def rule(path: str, x) -> P:
+        shape = x.shape
+        nd = x.ndim
+        stacked = path.startswith("groups/")  # leading group-stack axis
+        if stacked:
+            shape = shape[1:]
+            nd -= 1
+
+        def out(*axes) -> P:
+            axes = tuple(axes) + (None,) * (nd - len(axes))
+            if stacked:
+                axes = (None,) + axes
+            return P(*axes)
+
+        leaf = path.split("/")[-1]
+        parent = path.split("/")[-2] if "/" in path else ""
+
+        if nd == 0:
+            return out()
+        if nd == 1:
+            # biases / norm scales: shard TP-dim biases when they match a
+            # TP-sharded output dim; otherwise replicate (cheap).
+            return out(_div(shape[0], mesh, tp) if shape[0] >= 1024 else None)
+
+        # --- embeddings / head -------------------------------------------
+        if parent == "embed" or (parent == "head" and leaf == "w"):
+            if parent == "embed":  # [V, d]
+                return out(_div(shape[0], mesh, tp), _div(shape[1], mesh, dp))
+            return out(_div(shape[0], mesh, dp), _div(shape[1], mesh, tp))  # [d, V]
+
+        # --- MoE expert banks [E, d, ff] / [E, ff, d] ----------------------
+        if nd == 3:
+            e = shape[0]
+            if e % max(_axsize(mesh, tp), 1) == 0:
+                # expert parallelism; FSDP on the middle dim
+                return out(tp, _div(shape[1], mesh, dp), None)
+            # TP inside experts on the ff dim
+            ff_dim = 2 if leaf in ("gate", "up") else 1
+            axes: list[Any] = [None, None, None]
+            axes[ff_dim] = _div(shape[ff_dim], mesh, tp)
+            axes[2 if ff_dim == 1 else 1] = _div(shape[2 if ff_dim == 1 else 1], mesh, dp)
+            return out(*axes)
+
+        # --- 2-D weights ----------------------------------------------------
+        if leaf == "w":
+            import os
+
+            if (
+                parent in ("w_in", "r")
+                and shape[0] <= 1024
+                and os.environ.get("REPRO_REPLICATE_SMALL_RECURRENT", "0") == "1"
+            ):
+                # §Perf knob: tiny recurrent gate weights (sLSTM) replicated
+                # so the sequential scan has no per-step weight collectives
+                return out(None, None)
+            if parent in ("q", "k", "v", "gate", "up", "k_up", "v_up", "in_proj", "dt_proj", "w_in", "r"):
+                # column-parallel: output dim on TP, input dim on FSDP
+                return out(_div(shape[0], mesh, dp), _div(shape[1], mesh, tp))
+            if parent in ("o", "down", "out_proj", "out"):
+                # row-parallel: input dim on TP (psum after), output on FSDP
+                return out(_div(shape[0], mesh, tp), _div(shape[1], mesh, dp))
+            if parent in ("kv_down", "x_proj", "router", "i_gate", "f_gate", "o_gate"):
+                return out(_div(shape[0], mesh, dp), None)  # small projections
+            return out(_div(shape[0], mesh, dp), None)
+        # mamba/xlstm odd tensors: conv_w [K, d_in], A_log [d_in, n]
+        if leaf == "conv_w":
+            return out(None, _div(shape[1], mesh, tp))
+        if leaf == "A_log":
+            return out(_div(shape[0], mesh, tp), None)
+        return out(*(None,) * nd)
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = [walk(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(t) if not isinstance(tree, tuple) else tuple(t)
+        return rule(prefix.rstrip("/"), tree)
+
+    return walk(params)
+
+
+def opt_state_specs(cfg: ModelConfig, opt_state, pspecs):
+    """Optimizer moments mirror the parameter specs (ZeRO via FSDP dims)."""
+    return {
+        "m": pspecs,
+        "v": pspecs,
+        "step": P(),
+    }
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(tuple(dp_axes(mesh)))
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(tuple(dp_axes(mesh)), None, "model")
+
+
+def cache_specs(cfg: ModelConfig, cache, mesh: Mesh):
+    """Decode-cache specs: batch on data; heads on model if divisible,
+    else sequence-parallel (S on model)."""
+    dp = tuple(dp_axes(mesh))
+    tp = "model"
+    tp_size = _axsize(mesh, tp)
+
+    def rule(path: str, x) -> P:
+        nd = x.ndim
+        stacked = path.startswith("groups/")
+        shape = x.shape[1:] if stacked else x.shape
+        ndl = nd - (1 if stacked else 0)
+
+        def out(*axes) -> P:
+            axes = tuple(axes) + (None,) * (ndl - len(axes))
+            if stacked:
+                axes = (None,) + axes
+            return P(*axes)
+
+        def out(*axes) -> P:  # redefined with truncation to the leaf rank
+            axes = tuple(axes)[:ndl] + (None,) * max(ndl - len(axes), 0)
+            if stacked:
+                axes = (None,) + axes
+            return P(*axes)
+
+        leaf = path.split("/")[-1]
+        if ndl == 0:
+            return P()
+        b = shape[0]
+        bdp = _div(b, mesh, dp)
+        if leaf in ("k", "v", "k_scale", "v_scale"):  # [B, Hkv, S, dh?]
+            if shape[1] % tp_size == 0:
+                return out(bdp, tp, None, None)
+            return out(bdp, None, _div(shape[2], mesh, tp), None)
+        if leaf in ("latent", "k_rope"):  # [B, S, r] — sequence-parallel
+            return out(bdp, _div(shape[1], mesh, tp), None)
+        if leaf == "h":  # mamba state [B, d_in, n]
+            return out(bdp, _div(shape[1], mesh, tp), None)
+        if leaf == "conv":  # [B, K-1, d_in]
+            return out(bdp, None, _div(shape[2], mesh, tp))
+        if leaf == "c" and ndl == 4:  # mlstm [B, H, dh, dh]
+            return out(bdp, _div(shape[1], mesh, tp), None, None)
+        if leaf in ("n", "m", "c") and ndl >= 2:  # small recurrent states
+            return out(bdp)
+        if leaf == "len":
+            return P()
+        return out(bdp)
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = [walk(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(t) if not isinstance(tree, tuple) else tuple(t)
+        return rule(prefix.rstrip("/"), tree)
+
+    return walk(cache)
+
+
+def shard_tree(tree, specs, mesh: Mesh):
+    """device_put a host pytree according to spec pytree."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs
+    )

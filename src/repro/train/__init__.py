@@ -1,0 +1,4 @@
+from repro.train.step import TrainState, loss_fn, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["make_train_step", "loss_fn", "TrainState", "Trainer", "TrainerConfig"]

@@ -1,0 +1,86 @@
+"""Training step: next-token cross-entropy + AdamW, jit/pjit-ready.
+
+The step is pure (params, opt_state, batch) -> (params, opt_state,
+metrics); the trainer binds it to a mesh with in/out shardings.  Frontend
+archs ([vlm]/[audio]) receive precomputed embeddings in the batch; loss is
+computed over the text positions only.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean CE over positions with target >= 0.
+
+    Uses the one-hot/reduce form instead of take_along_axis: with the vocab
+    dim sharded over `model`, the iota-compare + elementwise + reduction
+    fuses and partitions cleanly (partial sums + psum) instead of forcing a
+    full-vocab all-gather."""
+    mask = targets >= 0
+    tgt = jnp.maximum(targets, 0)
+    l32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(l32, axis=-1)
+    onehot = tgt[..., None] == jnp.arange(logits.shape[-1])[None, None]
+    gold = jnp.sum(l32 * onehot, axis=-1)
+    ce = (logz - gold) * mask
+    return ce.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def loss_fn(
+    params,
+    cfg: ModelConfig,
+    batch: dict[str, jax.Array],
+    *,
+    block_skip: bool = False,
+):
+    logits, aux = lm.forward(
+        params,
+        cfg,
+        batch["inputs"],
+        batch.get("frontend"),
+        block_skip=block_skip,
+    )
+    nf = cfg.n_frontend_tokens if cfg.frontend else 0
+    text_logits = logits[:, nf:]
+    loss = cross_entropy(text_logits, batch["targets"])
+    return loss + aux, {"loss": loss, "aux_loss": aux}
+
+
+def make_train_step(
+    cfg: ModelConfig, opt_cfg: AdamWConfig, *, block_skip: bool = False
+):
+    def train_step(state: TrainState, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, block_skip=block_skip),
+            has_aux=True,
+        )(state.params)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt_state
+        )
+        metrics = {**metrics, **opt_metrics, "total_loss": total}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, cfg, batch)
+        return metrics
+
+    return eval_step

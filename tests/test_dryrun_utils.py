@@ -1,0 +1,89 @@
+"""Dry-run machinery unit tests: collective-byte HLO parsing (incl. loop
+trip-count multiplication), input specs, shape-suite policy."""
+
+import jax
+
+# Importing repro.launch.dryrun sets XLA_FLAGS for 512 virtual devices
+# (required for the real dry-run).  Initialize the backend FIRST so this
+# pytest process keeps its single CPU device — otherwise every later test
+# in the session runs against a surprise 512-device backend.
+_ = jax.devices()
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.dryrun import cell_config, collective_bytes, input_specs
+from repro.models.config import SHAPES, ShapeCell, shapes_for
+
+HLO = """\
+HloModule jit_step
+
+%region_0 (a: f32[]) -> f32[] {
+  ROOT %add = f32[] add(%a, %a)
+}
+
+%while_body_1 (p: (s32[], bf16[16,512])) -> (s32[], bf16[16,512]) {
+  %ag = bf16[16,512]{1,0} all-gather(%x), replica_groups=[2,4]<=[8]
+  %ar-start = (f32[256,128], f32[256,128]) all-reduce-start(%y)
+  %ar-done = f32[256,128] all-reduce-done(%ar-start)
+  ROOT %t = (s32[], bf16[16,512]) tuple(%i, %ag)
+}
+
+ENTRY %main () -> f32[] {
+  %big = f32[1024,1024]{1,0} reduce-scatter(%w), dimensions={0}
+  %fused = f32[8,8] fusion(%all-reduce.7), kind=kLoop
+  ROOT %r = f32[] constant(0)
+}
+"""
+
+
+def test_collective_parser_result_types_and_async():
+    got = collective_bytes(HLO, loop_trip_count=1)
+    assert got["all-gather"] == 16 * 512 * 2
+    # async pair counted once, destination buffer only
+    assert got["all-reduce"] == 256 * 128 * 4
+    assert got["reduce-scatter"] == 1024 * 1024 * 4
+    # fusion *use* of a collective is not a definition
+    assert "collective-permute" not in got
+
+
+def test_collective_parser_loop_trip_multiplier():
+    g1 = collective_bytes(HLO, loop_trip_count=1)
+    g6 = collective_bytes(HLO, loop_trip_count=6)
+    # ops inside %while_body_1 are multiplied; the entry-level one is not
+    assert g6["all-gather"] == 6 * g1["all-gather"]
+    assert g6["all-reduce"] == 6 * g1["all-reduce"]
+    assert g6["reduce-scatter"] == g1["reduce-scatter"]
+
+
+def test_shape_suite_policy():
+    names = [s.name for s in SHAPES]
+    assert names == ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    # long_500k only for SSM/hybrid
+    assert len(shapes_for(get_config("yi_34b"))) == 3
+    assert len(shapes_for(get_config("jamba_v0_1_52b"))) == 4
+    assert len(shapes_for(get_config("xlstm_125m"))) == 4
+
+
+def test_input_specs_shapes():
+    cfg = get_config("paligemma_3b")
+    cell = ShapeCell("train_4k", 4096, 256, "train")
+    specs = input_specs(cfg, cell)["batch"]
+    nf = cfg.n_frontend_tokens
+    assert specs["inputs"].shape == (256, 4096 - nf)
+    assert specs["frontend"].shape == (256, nf, cfg.d_model)
+    assert specs["frontend"].dtype == jnp.bfloat16
+
+    cell_d = ShapeCell("decode_32k", 32768, 128, "decode")
+    specs_d = input_specs(cfg, cell_d)
+    assert specs_d["token"].shape == (128, 1)
+
+
+def test_decode_cells_quantize_kv_except_mla():
+    cell = ShapeCell("decode_32k", 32768, 128, "decode")
+    assert cell_config("yi_34b", cell).kv_cache_dtype == "int8"
+    # MLA caches the latent — stays bf16
+    assert cell_config("deepseek_v2_236b", cell).kv_cache_dtype != "int8"
+    # train cells never quantize
+    tcell = ShapeCell("train_4k", 4096, 256, "train")
+    assert cell_config("yi_34b", tcell).kv_cache_dtype == "bfloat16"

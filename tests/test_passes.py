@@ -1,0 +1,83 @@
+"""Frontend passes: legalization (generalized-op fusion), constant folding
+of registered preprocessing, BYOC-style partitioning."""
+
+import numpy as np
+
+from repro.core import ir
+from repro.core.descriptions import make_gemmini_description
+from repro.core.passes import fold_constants, legalize, partition, run_frontend
+
+
+def _qdense_graph():
+    rng = np.random.default_rng(0)
+    x = ir.input_((4, 32), "int8", name="x")
+    w_fp = ir.const(rng.normal(size=(16, 32)).astype(np.float32), name="w")
+    w_q = ir.quantize(ir.transpose(w_fp, (1, 0)), scale=0.05)
+    b = ir.const(np.zeros(16, np.int32), name="b")
+    out = ir.clip(ir.requantize(ir.bias_add(ir.dense(x, w_q), b), scale=0.1))
+    return ir.Graph([out])
+
+
+def test_legalize_fuses_quantized_chain():
+    g = legalize(_qdense_graph())
+    ops = [n.op for n in g.toposort()]
+    assert "generalized_dense" in ops
+    assert "requantize" not in ops and "clip" not in ops and "bias_add" not in ops
+    gen = [n for n in g.toposort() if n.op == "generalized_dense"][0]
+    assert gen.attrs["quantized"] is True
+    assert gen.attrs["clip_lo"] == -128 and gen.attrs["clip_hi"] == 127
+
+
+def test_legalize_priority_quantized_over_bias():
+    """The full quantized chain must win over the bare bias_add rule."""
+    g = legalize(_qdense_graph())
+    gen = [n for n in g.toposort() if n.op == "generalized_dense"][0]
+    assert gen.attrs.get("quantized") is True  # not the bias-only fusion
+
+
+def test_fold_constants_removes_preprocessing():
+    g = legalize(_qdense_graph())
+    g = fold_constants(g)
+    ops = [n.op for n in g.toposort()]
+    assert "transpose" not in ops and "quantize" not in ops
+    # folded weight is int8 (C, K)
+    consts = [n for n in g.toposort() if n.op == "const" and n.shape == (32, 16)]
+    assert consts and consts[0].dtype == "int8"
+
+
+def test_naive_mode_keeps_preprocessing():
+    desc = make_gemmini_description()
+    g = run_frontend(_qdense_graph(), desc, fold=False, do_legalize=False)
+    ops = [n.op for n in g.toposort()]
+    assert "transpose" in ops and "quantize" in ops  # paid at run time
+    assert "requantize" in ops  # unfused epilogue on the host
+    targets = {n.op: n.target for n in g.toposort()}
+    assert targets["dense"] == "accel"
+    assert targets["requantize"] == "host"
+
+
+def test_partition_marks_supported_ops():
+    desc = make_gemmini_description()
+    g = run_frontend(_qdense_graph(), desc)
+    accel = [n for n in g.toposort() if n.target == "accel"]
+    assert len(accel) == 1 and accel[0].op == "generalized_dense"
+
+
+def test_float_activation_fusion():
+    x = ir.input_((4, 32), "float32", name="x")
+    w = ir.const(np.ones((32, 16), np.float32), name="w")
+    b = ir.const(np.zeros(16, np.float32), name="b")
+    out = ir.relu(ir.bias_add(ir.dense(x, w), b))
+    g = legalize(ir.Graph([out]))
+    gen = [n for n in g.toposort() if n.op == "generalized_dense"]
+    assert gen and gen[0].attrs["activation"] == "relu"
+
+
+def test_graph_reference_executor():
+    g = _qdense_graph()
+    x = np.random.default_rng(1).integers(-128, 128, (4, 32)).astype(np.int8)
+    out = ir.execute_graph(g, {"x": x})[0]
+    assert out.shape == (4, 16) and out.dtype == np.int8
+    # legalized graph is numerically identical
+    out2 = ir.execute_graph(legalize(_qdense_graph()), {"x": x})[0]
+    assert np.array_equal(out, out2)

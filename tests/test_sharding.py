@@ -1,0 +1,87 @@
+"""Sharding rules + a real multi-device lower/compile in a subprocess
+(the test process itself stays single-device; forcing host platform
+devices must happen before jax init)."""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.parallel import sharding as shd
+
+
+def _mesh1():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_specs_cover_tree():
+    cfg = get_smoke_config("yi_34b")
+    params = jax.eval_shape(lambda: lm.init_lm(jax.random.key(0), cfg))
+    mesh = _mesh1()
+    specs = shd.param_specs(cfg, params, mesh)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert isinstance(s, P)
+        assert len(s) <= p.ndim
+
+
+def test_cache_specs_cover_tree():
+    cfg = get_smoke_config("jamba_v0_1_52b")
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, 4, 64))
+    mesh = _mesh1()
+    specs = shd.cache_specs(cfg, cache, mesh)
+    flat_c = jax.tree.leaves(cache)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_c) == len(flat_s)
+
+
+def test_dp_axes_single_and_multi_pod():
+    m1 = jax.make_mesh((1, 1), ("data", "model"))
+    assert shd.dp_axes(m1) == ("data",)
+    m2 = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    assert shd.dp_axes(m2) == ("pod", "data")
+
+
+SUBPROCESS_DRYRUN = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from repro.launch.dryrun import build_cell
+    from repro.models.config import ShapeCell
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cell = ShapeCell("tiny_train", 64, 8, "train")
+    jfn, args, cfg = build_cell("{arch}", cell, mesh)
+    with mesh:
+        compiled = jfn.lower(*args).compile()
+    assert compiled.cost_analysis() is not None
+    print("SUBPROCESS_OK", cfg.name)
+    """
+)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["xlstm_125m", "mixtral_8x7b"])
+def test_multi_device_compile_smoke(arch):
+    """Full-config lower+compile on an 8-device mesh (reduced shapes)."""
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", SUBPROCESS_DRYRUN.format(arch=arch)],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    assert "SUBPROCESS_OK" in proc.stdout, proc.stderr[-2000:]

@@ -1,0 +1,116 @@
+"""End-to-end behaviour of the paper's system: accelerator description ->
+generated backend -> compile -> execute, across all three evaluation modes
+and both accelerator targets (Gemmini case study + TPU-v5e production)."""
+
+import numpy as np
+import pytest
+
+from repro.core import build_backend, ir
+from repro.core.descriptions import (
+    make_gemmini_description,
+    make_tpu_v5e_description,
+)
+
+
+def _qdense_graph(seed=0):
+    rng = np.random.default_rng(seed)
+    x = ir.input_((4, 96), "int8", name="x")
+    w_fp = ir.const(rng.normal(size=(80, 96)).astype(np.float32) * 0.02, name="w_fp")
+    w_q = ir.quantize(ir.transpose(w_fp, (1, 0)), scale=0.02)
+    b = ir.const(rng.integers(-100, 100, size=(80,)).astype(np.int32), name="bias")
+    out = ir.clip(ir.requantize(ir.bias_add(ir.dense(x, w_q), b), scale=0.25))
+    return ir.Graph([out], name="qdense")
+
+
+X = np.random.default_rng(1).integers(-128, 128, size=(4, 96)).astype(np.int8)
+REF = ir.execute_graph(_qdense_graph(), {"x": X})[0]
+
+
+@pytest.mark.parametrize("make_desc", [make_gemmini_description, make_tpu_v5e_description])
+@pytest.mark.parametrize("mode", ["proposed", "c_toolchain", "naive"])
+def test_backend_modes_bit_exact(make_desc, mode):
+    backend = build_backend(make_desc())
+    mod = backend.compile(_qdense_graph(), mode=mode)
+    out = mod.run({"x": X})[0]
+    assert np.array_equal(out, REF)
+
+
+def test_tpu_backend_pallas_interpret_path():
+    backend = build_backend(make_tpu_v5e_description(), use_pallas=True)
+    mod = backend.compile(_qdense_graph(), mode="proposed")
+    out = mod.run({"x": X})[0]
+    assert np.array_equal(out, REF)
+
+
+def test_cycle_model_ordering():
+    """The paper's headline: proposed ~= C toolchain << naive."""
+    backend = build_backend(make_gemmini_description())
+    cycles = {}
+    for mode in ("proposed", "c_toolchain", "naive"):
+        mod = backend.compile(_qdense_graph(), mode=mode)
+        cycles[mode] = mod.modeled_cycles()["total"]
+    assert cycles["proposed"] <= 1.2 * cycles["c_toolchain"]
+    assert cycles["naive"] > 3 * cycles["c_toolchain"]
+    # the naive gap comes from host-side work (unfolded preprocessing)
+    mod_naive = backend.compile(_qdense_graph(), mode="naive")
+    c = mod_naive.modeled_cycles()
+    assert c["host"] > 0.5 * c["total"]
+
+
+def test_description_validation_catches_errors():
+    desc = make_gemmini_description()
+    desc.intrinsics.clear()
+    errs = desc.validate()
+    assert errs  # missing intrinsics reported
+
+
+def test_scheduled_kernel_policy_integration():
+    """The paper's technique as a first-class LM feature: model GEMMs route
+    through the generated backend's scheduler."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.policy import scheduled_kernels
+    from repro.models import layers as L
+
+    backend = build_backend(make_tpu_v5e_description())
+    p = L.init_dense(jax.random.key(0), 256, 512)
+    x = jax.random.normal(jax.random.key(1), (64, 256))
+    base = L.dense(p, x)
+    with scheduled_kernels(backend, interpret=True):
+        routed = L.dense(p, x)
+    np.testing.assert_allclose(np.asarray(routed), np.asarray(base), rtol=1e-4, atol=1e-4)
+    # the scheduler actually saw the workload
+    assert len(backend.scheduler._cache) >= 1
+
+
+def test_conv2d_as_gemm_workload():
+    from repro.core import conv2d_as_gemm
+
+    wl = conv2d_as_gemm(1, 32, 32, 16, 64, 3, 3, stride=1)
+    assert wl.N == 30 * 30 and wl.C == 9 * 16 and wl.K == 64
+
+
+def test_conv2d_end_to_end_quantized():
+    """Quantized conv2d through the generated backend: legalized to one
+    generalized op, scheduled as its im2col GEMM (paper §3.2), bit-exact."""
+    rng = np.random.default_rng(0)
+    x = ir.input_((2, 12, 12, 8), "int8", name="x")
+    w = ir.const(rng.integers(-8, 8, (3, 3, 8, 16)).astype(np.int8), name="w")
+    b = ir.const(rng.integers(-50, 50, (16,)).astype(np.int32), name="b")
+
+    def graph():
+        out = ir.clip(
+            ir.requantize(ir.bias_add(ir.conv2d(x, w, stride=1), b), scale=0.05)
+        )
+        return ir.Graph([out], name="qconv")
+
+    xv = rng.integers(-128, 128, (2, 12, 12, 8)).astype(np.int8)
+    ref = ir.execute_graph(graph(), {"x": xv})[0]
+    backend = build_backend(make_gemmini_description())
+    for mode in ("proposed", "c_toolchain"):
+        mod = backend.compile(graph(), mode=mode)
+        got = mod.run({"x": xv})[0]
+        assert np.array_equal(got, ref), mode
+        gen = [n for n in mod.graph.toposort() if n.op == "generalized_conv2d"]
+        assert gen and gen[0].target == "accel"

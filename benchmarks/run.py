@@ -9,7 +9,13 @@ import time
 
 
 def main() -> None:
-    from benchmarks import kernels_bench, roofline, table1_loc, table2_latency
+    from benchmarks import (
+        integration_bench,
+        kernels_bench,
+        roofline,
+        table1_loc,
+        table2_latency,
+    )
 
     csv_rows = []
 
@@ -39,6 +45,10 @@ def main() -> None:
 
     # -- kernel micro-bench ---------------------------------------------------
     for name, us, derived in kernels_bench.main():
+        csv_rows.append((name, us, derived))
+
+    # -- schedule-cache: cold vs warm integrate() compiles --------------------
+    for name, us, derived in integration_bench.main():
         csv_rows.append((name, us, derived))
 
     # -- roofline collation ----------------------------------------------------

@@ -1,20 +1,28 @@
 """Integrate a BRAND-NEW accelerator in ~60 lines — the paper's core claim.
 
-We define "EdgeMM", a fictional 32x32 output-stationary edge accelerator
+We define "EdgeMM", a fictional 32x32 weight-stationary edge accelerator
 with a 512 KiB unified SRAM, entirely through the public description API
-(no compiler internals), then compile and run the same quantized model on
-it.  This is the paper's Table-1 story: the functional + architectural
-description below is ALL the user writes.
+(no compiler internals), register it with the accelerator registry, and
+hand it to ``repro.integrate()`` — one call that validates the description,
+generates the full compiler backend, and attaches the persistent schedule
+cache.  The same quantized model then compiles and runs on it in all three
+pipeline modes.
 
     PYTHONPATH=src python examples/integrate_accelerator.py
+
+(The in-tree ``edge_npu`` description in
+``src/repro/core/descriptions/edge_npu.py`` is the maintained version of
+this pattern; ``docs/integration_guide.md`` walks through it step by step.)
 """
+
+import tempfile
 
 import numpy as np
 
-from repro.core import build_backend, ir
-from repro.core.accel import AcceleratorDescription
+import repro
+from repro.core import ir
 from repro.core.arch_spec import (
-    OUTPUT_STATIONARY,
+    WEIGHT_STATIONARY,
     ArchSpec,
     HardwareConstraints,
     MemLevel,
@@ -33,81 +41,98 @@ edge_arch = ArchSpec(
         pe_dim=DIM,
         alignments={"N": DIM, "C": DIM, "K": DIM},
     ),
-    dataflows=(OUTPUT_STATIONARY,),
+    dataflows=(WEIGHT_STATIONARY,),
     macs_per_cycle=DIM * DIM,
     host_preproc_cycles_per_byte=16.0,
     instr_overhead_cycles=64.0,
 )
 
+
 # --------------------- functional description ------------------------------
-edgemm = AcceleratorDescription(name="edgemm", arch=edge_arch)
+@repro.register_accelerator("edgemm")
+def make_edgemm() -> repro.AcceleratorDescription:
+    desc = repro.AcceleratorDescription(name="edgemm", arch=edge_arch)
+
+    @desc.register_preprocessing("dense", operand="W", constant=True)
+    def transpose_weights(w):
+        return np.ascontiguousarray(np.transpose(w))
+
+    @desc.register_core_compute("edgemm_qgemm", op="dense", quantized=True)
+    def qdense(x_q, w_q, bias, scale):
+        acc = x_q.astype(np.int32) @ w_q.astype(np.int32) + bias
+        return np.clip(np.round(acc * scale), -128, 127).astype(np.int8)
+
+    @desc.register_hw_intrinsic(
+        "edgemm.mma",
+        kind="compute",
+        tag="edgemm_qgemm",
+        tile_limits={"N": DIM, "C": DIM, "K": DIM},
+        dataflow="WS",
+    )
+    def mma(a_tile, b_tile, acc_tile):
+        return acc_tile + a_tile.astype(np.int64) @ b_tile.astype(np.int64)
+
+    @desc.register_hw_intrinsic("edgemm.load", kind="memory", operand="In")
+    def load(dram, sram, rows, cols):
+        return ("load", rows, cols)
+
+    @desc.register_hw_intrinsic("edgemm.load_w", kind="memory", operand="W")
+    def load_w(dram, sram, rows, cols):
+        return ("load_w", rows, cols)
+
+    @desc.register_hw_intrinsic("edgemm.store", kind="memory", operand="Out")
+    def store(sram, dram, rows, cols):
+        return ("store", rows, cols)
+
+    return desc
 
 
-@edgemm.register_preprocessing("dense", operand="W", constant=True)
-def transpose_weights(w):
-    return np.ascontiguousarray(np.transpose(w))
-
-
-@edgemm.register_core_compute("edgemm_qgemm", op="dense", quantized=True)
-def qdense(x_q, w_q, bias, scale):
-    acc = x_q.astype(np.int32) @ w_q.astype(np.int32) + bias
-    return np.clip(np.round(acc * scale), -128, 127).astype(np.int8)
-
-
-@edgemm.register_hw_intrinsic(
-    "edgemm.mma",
-    kind="compute",
-    tag="edgemm_qgemm",
-    tile_limits={"N": DIM, "C": DIM, "K": DIM},
-    dataflow="OS",
-)
-def mma(a_tile, b_tile, acc_tile):
-    return acc_tile + a_tile.astype(np.int64) @ b_tile.astype(np.int64)
-
-
-@edgemm.register_hw_intrinsic("edgemm.load", kind="memory", operand="In")
-def load(dram, sram, rows, cols):
-    return ("load", rows, cols)
-
-
-@edgemm.register_hw_intrinsic("edgemm.load_w", kind="memory", operand="W")
-def load_w(dram, sram, rows, cols):
-    return ("load_w", rows, cols)
-
-
-@edgemm.register_hw_intrinsic("edgemm.store", kind="memory", operand="Out")
-def store(sram, dram, rows, cols):
-    return ("store", rows, cols)
-
-
-# --------------------- that's it: generate the backend ---------------------
-def main():
-    backend = build_backend(edgemm)
-
-    rng = np.random.default_rng(0)
+# --------------------- that's it: one call to integrate --------------------
+def build_graph(rng):
     x = ir.input_((16, 512), "int8", name="x")
     w = ir.quantize(
         ir.transpose(ir.const(rng.normal(size=(256, 512)).astype(np.float32) * 0.02)),
         scale=0.02,
     )
     b = ir.const(rng.integers(-50, 50, (256,)).astype(np.int32))
-    g = ir.Graph(
+    return ir.Graph(
         [ir.clip(ir.requantize(ir.bias_add(ir.dense(x, w), b), scale=0.1))],
         name="edge_dense",
     )
 
-    x_val = rng.integers(-128, 128, (16, 512)).astype(np.int8)
-    ref = ir.execute_graph(
-        ir.Graph(g.outputs, name="ref"), {"x": x_val}
-    )[0]
 
-    mod = backend.compile(g, mode="proposed")
-    out = mod.run({"x": x_val})[0]
-    print("functional match vs reference:", np.array_equal(out, ref))
-    print("modeled cycles:", f"{mod.modeled_cycles()['total']:,.0f}")
-    for name, sched in mod.schedules().items():
-        print(f"CoSA schedule for {name}: dataflow={sched['dataflow']}, "
-              f"dbuf={sched['double_buffer']}, shares={sched['memory_shares']}")
+def main():
+    rng = np.random.default_rng(0)
+    x_val = rng.integers(-128, 128, (16, 512)).astype(np.int8)
+    ref = ir.execute_graph(build_graph(np.random.default_rng(0)), {"x": x_val})[0]
+
+    with tempfile.TemporaryDirectory() as cache_dir:
+        backend = repro.integrate("edgemm", cache_dir=cache_dir)
+        proposed_mod = None
+        for mode in ("proposed", "c_toolchain", "naive"):
+            mod = backend.compile(build_graph(np.random.default_rng(0)), mode=mode)
+            if mode == "proposed":
+                proposed_mod = mod
+            out = mod.run({"x": x_val})[0]
+            print(
+                f"[{mode:12s}] match vs reference: {np.array_equal(out, ref)}  "
+                f"modeled cycles: {mod.modeled_cycles()['total']:>12,.0f}"
+            )
+
+        for name, sched in proposed_mod.schedules().items():
+            print(
+                f"CoSA schedule for {name}: dataflow={sched['dataflow']}, "
+                f"dbuf={sched['double_buffer']}, shares={sched['memory_shares']}"
+            )
+
+        # recompile in a FRESH backend: everything comes from the persistent
+        # schedule cache — zero extended-CoSA DSE sweeps.
+        warm = repro.integrate("edgemm", cache_dir=cache_dir)
+        warm.compile(build_graph(np.random.default_rng(0)), mode="proposed")
+        print(
+            f"warm recompile: scheduler sweeps={warm.scheduler.n_solver_calls}, "
+            f"cache hits={warm.schedule_cache.stats.hits}"
+        )
 
 
 if __name__ == "__main__":

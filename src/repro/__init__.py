@@ -1,0 +1,52 @@
+"""repro — a high-level compiler-integration framework for GEMM-based DL
+accelerators (reproduction of "A High-Level Compiler Integration Approach
+for Deep Learning Accelerators Supporting Abstraction and Optimization").
+
+The one-call integration surface:
+
+    import repro
+
+    backend = repro.integrate("edge_npu")     # registered name, or pass an
+                                              # AcceleratorDescription object
+    module = backend.compile(graph, mode="proposed")
+    outputs = module.run(feeds)
+    cycles = module.modeled_cycles()
+
+New accelerators register a description factory:
+
+    @repro.register_accelerator("my_npu")
+    def make_my_npu() -> repro.AcceleratorDescription:
+        ...
+
+See ``docs/integration_guide.md`` for the full tutorial.
+"""
+
+from repro.core.accel import AcceleratorDescription
+from repro.core.arch_spec import ArchSpec, GemmWorkload, conv2d_as_gemm
+from repro.core.registry import (
+    REGISTRY,
+    AcceleratorRegistry,
+    IntegrationError,
+    integrate,
+    register_accelerator,
+    validate_description,
+)
+from repro.core.schedule_cache import ScheduleCache, default_cache_dir
+
+__version__ = "0.1.0"
+
+__all__ = [
+    "AcceleratorDescription",
+    "AcceleratorRegistry",
+    "ArchSpec",
+    "GemmWorkload",
+    "IntegrationError",
+    "REGISTRY",
+    "ScheduleCache",
+    "conv2d_as_gemm",
+    "default_cache_dir",
+    "integrate",
+    "register_accelerator",
+    "validate_description",
+    "__version__",
+]

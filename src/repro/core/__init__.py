@@ -1,23 +1,44 @@
 """The paper's primary contribution: a compiler-integration framework for
 GEMM-based DL accelerators — accelerator descriptions, extended-CoSA
 scheduling, and the generated backend (configurators -> strategies ->
-intrinsics -> mappings -> executables + cycle model)."""
+intrinsics -> mappings -> executables + cycle model).
+
+``repro.core.registry`` is the public integration surface: a named
+accelerator registry plus the one-call ``integrate()`` that validates a
+description, generates the backend, and attaches the persistent schedule
+cache."""
 
 from repro.core.accel import AcceleratorDescription
 from repro.core.arch_spec import ArchSpec, GemmWorkload, conv2d_as_gemm
 from repro.core.configurators import build_backend
+from repro.core.registry import (
+    REGISTRY,
+    AcceleratorRegistry,
+    IntegrationError,
+    integrate,
+    register_accelerator,
+    validate_description,
+)
 from repro.core.schedule import Schedule, validate_schedule
+from repro.core.schedule_cache import ScheduleCache
 from repro.core.scheduler import ExtendedCosaScheduler
 from repro.core.simulator import simulate
 
 __all__ = [
     "AcceleratorDescription",
+    "AcceleratorRegistry",
     "ArchSpec",
-    "GemmWorkload",
-    "conv2d_as_gemm",
-    "build_backend",
-    "Schedule",
-    "validate_schedule",
     "ExtendedCosaScheduler",
+    "GemmWorkload",
+    "IntegrationError",
+    "REGISTRY",
+    "Schedule",
+    "ScheduleCache",
+    "build_backend",
+    "conv2d_as_gemm",
+    "integrate",
+    "register_accelerator",
     "simulate",
+    "validate_description",
+    "validate_schedule",
 ]

@@ -193,6 +193,11 @@ class ArchSpec:
                 "pe_dim": self.constraints.pe_dim,
                 "spatial_levels": list(self.constraints.spatial_levels),
                 "alignments": dict(self.constraints.alignments),
+                # tuple keys (dim, level) flattened for JSON/YAML
+                "max_temporal_factors": sorted(
+                    [j, i, lim]
+                    for (j, i), lim in self.constraints.max_temporal_factors.items()
+                ),
                 "memory_share_candidates": [
                     list(s) for s in self.constraints.memory_share_candidates
                 ],
@@ -231,6 +236,9 @@ class ArchSpec:
             pe_dim=c["pe_dim"],
             spatial_levels=tuple(c.get("spatial_levels", (0,))),
             alignments=dict(c.get("alignments", {"N": 1, "C": 1, "K": 1})),
+            max_temporal_factors={
+                (j, i): lim for j, i, lim in c.get("max_temporal_factors", ())
+            },
             double_buffer_candidates=tuple(
                 c.get("double_buffer_candidates", (True, False))
             ),

@@ -19,6 +19,7 @@ from repro.core.ir import Graph
 from repro.core.mapping import MappingGenerator
 from repro.core.passes import run_frontend
 from repro.core.pipeline import CompilerBackend
+from repro.core.schedule_cache import ScheduleCache
 from repro.core.scheduler import ExtendedCosaScheduler
 from repro.core.strategy import StrategyGenerator
 
@@ -40,12 +41,20 @@ class BackendConfigurator:
 
     desc: AcceleratorDescription
     use_mip: bool = True
+    parallel_dse: bool = False
 
-    def configure(self, *, use_pallas: bool = False) -> CompilerBackend:
+    def configure(
+        self,
+        *,
+        use_pallas: bool = False,
+        schedule_cache: ScheduleCache | None = None,
+    ) -> CompilerBackend:
         errs = self.desc.validate()
         if errs:
             raise ValueError(f"invalid accelerator description: {errs}")
-        scheduler = ExtendedCosaScheduler(self.desc.arch, use_mip=self.use_mip)
+        scheduler = ExtendedCosaScheduler(
+            self.desc.arch, use_mip=self.use_mip, parallel=self.parallel_dse
+        )
         return CompilerBackend(
             desc=self.desc,
             scheduler=scheduler,
@@ -53,11 +62,24 @@ class BackendConfigurator:
             intrinsic_gen=HardwareIntrinsicGenerator(self.desc),
             mapping_gen=MappingGenerator(self.desc),
             use_pallas=use_pallas,
+            schedule_cache=schedule_cache,
         )
 
 
 def build_backend(
-    desc: AcceleratorDescription, *, use_mip: bool = True, use_pallas: bool = False
+    desc: AcceleratorDescription,
+    *,
+    use_mip: bool = True,
+    use_pallas: bool = False,
+    parallel_dse: bool = False,
+    schedule_cache: ScheduleCache | None = None,
 ) -> CompilerBackend:
-    """One-call accelerator integration (the paper's headline API)."""
-    return BackendConfigurator(desc, use_mip=use_mip).configure(use_pallas=use_pallas)
+    """One-call backend generation from a description.
+
+    ``repro.integrate()`` is the registry-aware wrapper around this: it adds
+    name resolution, richer validation, and a persistent schedule cache by
+    default.
+    """
+    return BackendConfigurator(desc, use_mip=use_mip, parallel_dse=parallel_dse).configure(
+        use_pallas=use_pallas, schedule_cache=schedule_cache
+    )

@@ -1,4 +1,22 @@
+"""In-tree accelerator descriptions.
+
+Importing this package registers every in-tree accelerator with the global
+``repro.core.registry.REGISTRY`` (the registry imports it lazily on first
+name lookup, so ``repro.integrate("gemmini")`` always resolves).
+"""
+
+from repro.core.descriptions.edge_npu import make_edge_npu_description
 from repro.core.descriptions.gemmini import make_gemmini_description
 from repro.core.descriptions.tpu_v5e import make_tpu_v5e_description
+from repro.core.registry import REGISTRY
 
-__all__ = ["make_gemmini_description", "make_tpu_v5e_description"]
+# exist_ok: re-import is idempotent, and a user who registered one of these
+# names before this import keeps their factory.
+REGISTRY.register("gemmini", make_gemmini_description, exist_ok=True)
+REGISTRY.register("tpu_v5e", make_tpu_v5e_description, exist_ok=True)
+
+__all__ = [
+    "make_edge_npu_description",
+    "make_gemmini_description",
+    "make_tpu_v5e_description",
+]

@@ -33,6 +33,7 @@ from repro.core.intrinsics import HardwareIntrinsicGenerator
 from repro.core.ir import Graph, Node, execute_node
 from repro.core.mapping import MappingGenerator
 from repro.core.passes import run_frontend
+from repro.core.schedule_cache import ScheduleCache
 from repro.core.scheduler import ExtendedCosaScheduler, ScheduleResult
 from repro.core.simulator import simulate
 from repro.core.strategy import Strategy, StrategyGenerator, dtype_bytes, workload_from_node
@@ -117,11 +118,45 @@ class CompilerBackend:
     intrinsic_gen: HardwareIntrinsicGenerator
     mapping_gen: MappingGenerator
     use_pallas: bool = False  # TPU desc: run kernels in interpret mode
+    # attached by repro.integrate(): persistent cross-process schedule store
+    # keyed by (workload, arch fingerprint, mode)
+    schedule_cache: ScheduleCache | None = None
+    # the description (and the scheduler's solver) are frozen once the
+    # backend is generated, so hash/probe them at most once per backend.
+    _desc_fingerprint: str | None = None
+    _solver_id: str | None = None
+
+    def _cache_key(self, wl, mode: str) -> str:
+        if self._desc_fingerprint is None:
+            self._desc_fingerprint = self.desc.fingerprint()
+        if self._solver_id is None:
+            self._solver_id = self.scheduler.solver_id()
+        return ScheduleCache.key_for(
+            wl, self._desc_fingerprint, mode, solver=self._solver_id
+        )
 
     def _schedule_for(self, node: Node, mode: str) -> ScheduleResult:
         wl = workload_from_node(node)
+        key = None
+        if self.schedule_cache is not None:
+            key = self._cache_key(wl, mode)
+            cached = self.schedule_cache.get(key)
+            if cached is not None:
+                return cached
+        result = self._schedule_uncached(wl, mode)
+        if key is not None:
+            self.schedule_cache.put(key, result)
+        return result
+
+    def _schedule_uncached(self, wl, mode: str) -> ScheduleResult:
         if mode == "proposed":
             return self.scheduler.schedule(wl)
+        if not any(df.name == "WS" for df in self.desc.arch.dataflows):
+            raise ValueError(
+                f"mode {mode!r} schedules the weight-stationary baseline, but "
+                f"{self.desc.name!r} declares no 'WS' dataflow; use "
+                f"mode='proposed' or add WEIGHT_STATIONARY to arch.dataflows"
+            )
         if mode == "c_toolchain":
             sched = c_toolchain_schedule(wl, self.desc.arch)
         elif mode == "naive":
@@ -245,4 +280,6 @@ class CompilerBackend:
             module.ops[n] = CompiledOp(
                 node=n, strategy=strat, executor=self._make_executor(n, strat)
             )
+        if self.schedule_cache is not None:
+            self.schedule_cache.flush()
         return module

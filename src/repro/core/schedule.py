@@ -125,6 +125,9 @@ class Schedule:
                 "N": self.workload.N,
                 "C": self.workload.C,
                 "K": self.workload.K,
+                "in_bytes": self.workload.in_bytes,
+                "w_bytes": self.workload.w_bytes,
+                "out_bytes": self.workload.out_bytes,
             },
             "arch": self.arch_name,
             "dataflow": self.dataflow,
@@ -141,6 +144,35 @@ class Schedule:
                 for i in range(len(self.temporal))
             ],
         }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Schedule":
+        """Inverse of ``to_dict`` — used by the persistent schedule cache."""
+        w = d["workload"]
+        workload = GemmWorkload(
+            N=w["N"],
+            C=w["C"],
+            K=w["K"],
+            in_bytes=w.get("in_bytes", 1),
+            w_bytes=w.get("w_bytes", 1),
+            out_bytes=w.get("out_bytes", 4),
+            name=w.get("name", "gemm"),
+        )
+        return cls(
+            workload=workload,
+            arch_name=d["arch"],
+            dataflow=d["dataflow"],
+            temporal=tuple(
+                {j: lvl["temporal"][j] for j in GEMM_DIMS} for lvl in d["levels"]
+            ),
+            spatial=tuple(
+                {j: lvl["spatial"][j] for j in GEMM_DIMS} for lvl in d["levels"]
+            ),
+            memory_shares=tuple(d["memory_shares"]),
+            double_buffer=d["double_buffer"],
+            loop_order=tuple(d["loop_order"]),
+            padded_dims=dict(d["padded_dims"]),
+        )
 
     def to_yaml(self) -> str:
         import yaml

@@ -1,0 +1,208 @@
+"""Persistent schedule cache for the integration registry.
+
+Extended-CoSA DSE is the expensive step of a compile: per workload it sweeps
+(dataflow x memory-share x double-buffer) candidates, solves a MIP (or the
+greedy fallback) for each, and ranks them on the cycle model.  LMs reuse the
+same handful of GEMM shapes across dozens of layers and across *runs*, so
+`repro.integrate()` attaches this cache to every backend it builds: entries
+are keyed by ``(workload, architecture fingerprint, pipeline mode)`` and
+persisted as JSON, so recompiling the same graph — even in a fresh process —
+performs zero scheduler invocations.
+
+The arch fingerprint (``AcceleratorDescription.fingerprint()``) covers the
+full architectural description plus scheduling-relevant functional state, so
+editing an accelerator description invalidates its entries automatically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from repro.core.accel import AcceleratorDescription
+from repro.core.arch_spec import GemmWorkload
+from repro.core.schedule import Schedule
+from repro.core.scheduler import ScheduleResult
+from repro.core.simulator import SimReport
+
+CACHE_FORMAT_VERSION = 1
+_CACHE_FILE = "schedules.json"
+
+
+def default_cache_dir() -> Path:
+    """``$REPRO_CACHE_DIR``, else ``~/.cache/repro``."""
+    env = os.environ.get("REPRO_CACHE_DIR")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro"
+
+
+# -- (de)serialization of cache values --------------------------------------
+
+
+def result_to_dict(r: ScheduleResult) -> dict:
+    return {
+        "best": r.best.to_dict(),
+        "report": dataclasses.asdict(r.report),
+        "n_candidates": r.n_candidates,
+        "n_infeasible": r.n_infeasible,
+    }
+
+
+def result_from_dict(d: dict) -> ScheduleResult:
+    return ScheduleResult(
+        best=Schedule.from_dict(d["best"]),
+        report=SimReport(**d["report"]),
+        n_candidates=d["n_candidates"],
+        n_infeasible=d["n_infeasible"],
+    )
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclass
+class ScheduleCache:
+    """Two-tier (memory + optional JSON file) cache of ScheduleResults.
+
+    ``path=None`` keeps the cache purely in-memory (still shared across the
+    backends of one process when the same instance is passed around).  With a
+    directory path, ``flush()`` (called once per backend compile) writes the
+    file atomically and merges with entries other processes wrote in the
+    meantime, so concurrent writers at worst lose a race, never corrupt the
+    file or drop each other's entries.
+    """
+
+    path: Path | None = None
+    stats: CacheStats = field(default_factory=CacheStats)
+    _mem: dict[str, ScheduleResult] = field(default_factory=dict)
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+    _dirty: bool = False
+
+    def __post_init__(self):
+        if self.path is not None:
+            self.path = Path(self.path)
+            self._load()
+
+    # -- keying -------------------------------------------------------------
+    @staticmethod
+    def key_for(
+        workload: GemmWorkload,
+        desc: AcceleratorDescription | str,
+        mode: str,
+        solver: str = "mip",
+    ) -> str:
+        """``desc`` is a description or its precomputed ``fingerprint()``
+        (callers on a hot path memoize it).  ``solver`` names what actually
+        produced the schedule (the scheduler's ``solver_id()``) so MIP- and
+        heuristic-derived entries never shadow each other."""
+        fp = desc if isinstance(desc, str) else desc.fingerprint()
+        wl = workload.key()  # (N, C, K, in_bytes, w_bytes, out_bytes)
+        return f"{fp}|{solver}|{mode}|" + "x".join(str(v) for v in wl)
+
+    # -- lookup / insert ----------------------------------------------------
+    def get(self, key: str) -> ScheduleResult | None:
+        with self._lock:
+            hit = self._mem.get(key)
+            if hit is not None:
+                self.stats.hits += 1
+            else:
+                self.stats.misses += 1
+            return hit
+
+    def put(self, key: str, result: ScheduleResult) -> None:
+        """Insert into the memory tier; the disk tier is written by
+        ``flush()`` (the backend flushes once per compile, not per node)."""
+        with self._lock:
+            self._mem[key] = result
+            self.stats.puts += 1
+            self._dirty = True
+
+    def flush(self) -> None:
+        """Write pending entries through to disk (merging with concurrent
+        writers' entries).  No-op when nothing changed or memory-only."""
+        with self._lock:
+            if self._dirty:
+                self._try_save_locked(merge=True)
+                self._dirty = False
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def clear(self) -> None:
+        """Drop every entry from BOTH tiers (the disk file is rewritten
+        empty, not merged)."""
+        with self._lock:
+            self._mem.clear()
+            self._dirty = False
+            self._try_save_locked(merge=False)
+
+    # -- persistence --------------------------------------------------------
+    @property
+    def file(self) -> Path | None:
+        return None if self.path is None else self.path / _CACHE_FILE
+
+    def _load(self) -> None:
+        f = self.file
+        if f is None or not f.exists():
+            return
+        try:
+            payload = json.loads(f.read_text())
+            if payload.get("version") != CACHE_FORMAT_VERSION:
+                return  # stale format: start fresh, overwrite on next put
+            self._mem = {
+                k: result_from_dict(v) for k, v in payload["entries"].items()
+            }
+        except (OSError, ValueError, KeyError, TypeError):
+            self._mem = {}  # corrupt cache is never fatal
+
+    def _try_save_locked(self, merge: bool = True) -> None:
+        """Persist if possible; an unwritable cache location must never fail
+        a compile — degrade to memory-only with a one-time warning."""
+        if self.path is None:
+            return
+        try:
+            self._save_locked(merge=merge)
+        except OSError as e:
+            import warnings
+
+            warnings.warn(
+                f"schedule cache is not persistable at {self.path} ({e}); "
+                f"continuing with the in-memory tier only",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+            self.path = None
+
+    def _save_locked(self, merge: bool = True) -> None:
+        f = self.file
+        assert f is not None
+        f.parent.mkdir(parents=True, exist_ok=True)
+        # merge with whatever is on disk (raw, no deserialization) so
+        # concurrent processes sharing the cache dir don't drop each
+        # other's entries; our entries win on key collision.  clear()
+        # passes merge=False so the disk tier is actually emptied.
+        entries: dict = {}
+        if merge:
+            try:
+                prior = json.loads(f.read_text())
+                if prior.get("version") == CACHE_FORMAT_VERSION:
+                    entries = dict(prior.get("entries", {}))
+            except (OSError, ValueError):
+                pass
+        entries.update((k, result_to_dict(v)) for k, v in self._mem.items())
+        payload = {"version": CACHE_FORMAT_VERSION, "entries": entries}
+        tmp = f.with_suffix(f".tmp.{os.getpid()}")
+        tmp.write_text(json.dumps(payload))
+        tmp.replace(f)

@@ -11,16 +11,23 @@ return the best schedule.
                 score    = cycle_model(schedule)                # "hardware"
     best = argmin(score)
 
-Schedules are cached per (workload, arch) because LMs re-use the same GEMM
-shapes across layers.
+Schedules are cached per (workload, arch) in-process because LMs re-use the
+same GEMM shapes across layers; ``repro.core.schedule_cache`` adds the
+cross-process persistent tier keyed by arch fingerprint + mode.
+
+``parallel=True`` fans the per-candidate solve+simulate work out over a
+thread pool for cold-cache compiles; the result is deterministic (ties
+break on candidate order, identical to the serial sweep).
 """
 
 from __future__ import annotations
 
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
+from itertools import product
 
-from repro.core.arch_spec import ArchSpec, GemmWorkload
+from repro.core.arch_spec import ArchSpec, Dataflow, GemmWorkload
 from repro.core.cosa.heuristic import solve_heuristic
 from repro.core.cosa.mip import solve_mip
 from repro.core.schedule import Schedule, validate_schedule
@@ -40,8 +47,25 @@ class ExtendedCosaScheduler:
     arch: ArchSpec
     use_mip: bool = True
     mip_time_limit_s: float = 10.0
+    parallel: bool = False
+    max_workers: int | None = None
+    # number of cold DSE sweeps performed (i.e. extended-CoSA invocations
+    # that were not answered from a cache) — asserted on by cache tests.
+    n_solver_calls: int = 0
     _cache: dict = field(default_factory=dict)
     _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def solver_id(self) -> str:
+        """Which solver actually produces schedules — 'mip' only when the
+        MIP is both requested and installable.  Part of the persistent
+        cache key, so installing pulp (or flipping use_mip) invalidates
+        schedules produced by the other solver."""
+        if self.use_mip:
+            import importlib.util
+
+            if importlib.util.find_spec("pulp") is not None:
+                return "mip"
+        return "heuristic"
 
     def schedule(self, workload: GemmWorkload) -> ScheduleResult:
         key = workload.key()
@@ -53,44 +77,61 @@ class ExtendedCosaScheduler:
             self._cache[key] = result
         return result
 
-    def _schedule_uncached(self, workload: GemmWorkload) -> ScheduleResult:
+    def _candidates(self) -> list[tuple[Dataflow, tuple, bool]]:
         c = self.arch.constraints
+        return list(
+            product(
+                self.arch.dataflows,
+                c.memory_share_candidates,
+                c.double_buffer_candidates,
+            )
+        )
+
+    def _eval_candidate(
+        self, workload: GemmWorkload, dataflow: Dataflow, shares: tuple, dbuf: bool
+    ) -> tuple[Schedule, SimReport] | None:
+        sched = None
+        if self.use_mip:
+            sched = solve_mip(
+                workload,
+                self.arch,
+                dataflow,
+                shares,
+                dbuf,
+                time_limit_s=self.mip_time_limit_s,
+            )
+        if sched is None:
+            sched = solve_heuristic(workload, self.arch, dataflow, shares, dbuf)
+        if sched is None:
+            return None
+        if validate_schedule(sched, self.arch):
+            return None
+        return sched, simulate(sched, self.arch)
+
+    def _schedule_uncached(self, workload: GemmWorkload) -> ScheduleResult:
+        with self._lock:
+            self.n_solver_calls += 1
+        candidates = self._candidates()
+        if self.parallel and len(candidates) > 1:
+            with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+                evaluated = list(
+                    pool.map(
+                        lambda c: self._eval_candidate(workload, *c), candidates
+                    )
+                )
+        else:
+            evaluated = [self._eval_candidate(workload, *c) for c in candidates]
+
         best: Schedule | None = None
         best_report: SimReport | None = None
-        n_cand = 0
-        n_infeasible = 0
-
-        for dataflow in self.arch.dataflows:
-            for shares in c.memory_share_candidates:
-                for dbuf in c.double_buffer_candidates:
-                    sched = None
-                    if self.use_mip:
-                        sched = solve_mip(
-                            workload,
-                            self.arch,
-                            dataflow,
-                            shares,
-                            dbuf,
-                            time_limit_s=self.mip_time_limit_s,
-                        )
-                    if sched is None:
-                        sched = solve_heuristic(
-                            workload, self.arch, dataflow, shares, dbuf
-                        )
-                    if sched is None:
-                        n_infeasible += 1
-                        continue
-                    errs = validate_schedule(sched, self.arch)
-                    if errs:
-                        n_infeasible += 1
-                        continue
-                    n_cand += 1
-                    report = simulate(sched, self.arch)
-                    if (
-                        best_report is None
-                        or report.total_cycles < best_report.total_cycles
-                    ):
-                        best, best_report = sched, report
+        n_infeasible = sum(1 for e in evaluated if e is None)
+        n_cand = len(evaluated) - n_infeasible
+        for e in evaluated:
+            if e is None:
+                continue
+            sched, report = e
+            if best_report is None or report.total_cycles < best_report.total_cycles:
+                best, best_report = sched, report
 
         if best is None or best_report is None:
             raise RuntimeError(

@@ -22,6 +22,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams across releases;
+# resolve whichever this jax ships so the kernel works on both sides.
+TPUCompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
 
 @dataclass(frozen=True)
 class GemmKernelConfig:
@@ -145,7 +151,7 @@ def scheduled_gemm(
         scratch_shapes=[
             pltpu.VMEM((cfg.block_m, cfg.block_n), jnp.dtype(cfg.acc_dtype))
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=cfg.interpret,

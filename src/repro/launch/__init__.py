@@ -1,0 +1,1 @@
+"""Launch entry points: mesh setup, training/serving drivers, dry-run."""

@@ -1,0 +1,3 @@
+"""Model substrate: layers, attention, MoE, SSM/xLSTM blocks, and LM
+assembly whose GEMMs can route through the generated accelerator backend
+(see ``repro.kernels.policy.scheduled_kernels``)."""

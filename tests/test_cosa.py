@@ -2,6 +2,8 @@
 MIP-vs-heuristic cross-checks, description round-trips."""
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="install the `test` extra for property tests")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.arch_spec import GEMM_DIMS, ArchSpec, GemmWorkload

@@ -1,0 +1,257 @@
+"""The integration registry and schedule cache: one-call integrate(),
+validation errors, persistent cache hit/miss semantics (zero DSE sweeps on
+a warm cache), parallel DSE parity, and the edge_npu proof-of-abstraction
+(a third accelerator registered purely through the public API, end-to-end
+in all three pipeline modes)."""
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import ir
+from repro.core.arch_spec import GemmWorkload
+from repro.core.descriptions import make_edge_npu_description, make_gemmini_description
+from repro.core.example_graphs import quantized_conv_dense_graph as _conv_dense_graph
+from repro.core.registry import AcceleratorRegistry, IntegrationError
+from repro.core.schedule import Schedule
+from repro.core.schedule_cache import ScheduleCache, result_from_dict, result_to_dict
+
+
+X = np.random.default_rng(1).integers(-128, 128, (1, 10, 10, 8)).astype(np.int8)
+REF = ir.execute_graph(_conv_dense_graph(), {"x": X})[0]
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_builtin_descriptions_registered():
+    assert {"gemmini", "tpu_v5e", "edge_npu"} <= set(repro.REGISTRY.names())
+    assert "edge_npu" in repro.REGISTRY
+
+
+def test_registry_unknown_name_lists_known():
+    with pytest.raises(KeyError, match="edge_npu"):
+        repro.REGISTRY.get("not_a_real_accelerator")
+
+
+def test_registry_duplicate_and_override():
+    reg = AcceleratorRegistry()
+    reg.register("a", make_edge_npu_description)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", make_edge_npu_description)
+    reg.register("a", make_gemmini_description, override=True)
+    assert reg.get("a").name == "gemmini"
+
+
+def test_registry_exist_ok_keeps_first_registration():
+    # the builtin registration path: an earlier (user) factory wins
+    reg = AcceleratorRegistry()
+    reg.register("a", make_edge_npu_description)
+    reg.register("a", make_gemmini_description, exist_ok=True)
+    assert reg.get("a").name == "edge_npu"
+
+
+def test_validation_rejects_undersized_buffer():
+    import dataclasses
+
+    desc = make_edge_npu_description()
+    levels = list(desc.arch.levels)
+    levels[1] = dataclasses.replace(levels[1], size_bytes=100)  # < 3 PE tiles
+    desc.arch = dataclasses.replace(desc.arch, levels=tuple(levels))
+    with pytest.raises(IntegrationError, match="PE tile per buffered operand"):
+        repro.integrate(desc)
+
+
+def test_integrate_validation_errors():
+    desc = make_gemmini_description()
+    desc.intrinsics.clear()
+    with pytest.raises(IntegrationError) as exc:
+        repro.integrate(desc)
+    msgs = "\n".join(exc.value.problems)
+    assert "no compute intrinsic" in msgs
+    assert "no memory intrinsics" in msgs
+
+
+def test_integrate_rejects_missing_tile_limits():
+    desc = make_edge_npu_description()
+    for intr in desc.intrinsics.values():
+        if intr.kind == "compute":
+            intr.tile_limits = None
+    with pytest.raises(IntegrationError, match="tile_limits"):
+        repro.integrate(desc)
+
+
+def test_os_only_accelerator_works_in_proposed_mode():
+    """An output-stationary-only description is valid and compiles in
+    'proposed' mode; the WS-based baseline modes fail with a clear error
+    at compile time, not at integrate time."""
+    import dataclasses
+
+    from repro.core.arch_spec import OUTPUT_STATIONARY
+
+    desc = make_edge_npu_description()
+    desc.arch = dataclasses.replace(desc.arch, dataflows=(OUTPUT_STATIONARY,))
+    backend = repro.integrate(desc, cache=False)
+    mod = backend.compile(_conv_dense_graph(), mode="proposed")
+    assert np.array_equal(mod.run({"x": X})[0], REF)
+    with pytest.raises(ValueError, match="no 'WS' dataflow"):
+        backend.compile(_conv_dense_graph(), mode="c_toolchain")
+
+
+# -- edge_npu end-to-end (the proof-of-abstraction) ---------------------------
+
+
+@pytest.mark.parametrize("mode", ["proposed", "c_toolchain", "naive"])
+def test_edge_npu_three_modes_bit_exact(mode):
+    backend = repro.integrate("edge_npu", cache=False)
+    mod = backend.compile(_conv_dense_graph(), mode=mode)
+    out = mod.run({"x": X})[0]
+    assert np.array_equal(out, REF)
+    cycles = mod.modeled_cycles()
+    assert cycles["total"] > 0
+
+
+def test_edge_npu_cycle_model_ordering():
+    backend = repro.integrate("edge_npu", cache=False)
+    cycles = {
+        mode: backend.compile(_conv_dense_graph(), mode=mode).modeled_cycles()["total"]
+        for mode in ("proposed", "c_toolchain", "naive")
+    }
+    assert cycles["proposed"] <= 1.2 * cycles["c_toolchain"]
+    assert cycles["naive"] > 3 * cycles["c_toolchain"]
+
+
+# -- schedule cache ------------------------------------------------------------
+
+
+def test_schedule_result_roundtrip():
+    backend = repro.integrate("edge_npu", cache=False)
+    wl = GemmWorkload(N=96, C=72, K=24, in_bytes=1, w_bytes=1, out_bytes=4, name="rt")
+    result = backend.scheduler.schedule(wl)
+    back = result_from_dict(result_to_dict(result))
+    assert back.best == result.best
+    assert back.report == result.report
+    assert back.n_candidates == result.n_candidates
+    assert Schedule.from_dict(result.best.to_dict()) == result.best
+
+
+def test_cache_warm_compile_zero_dse_sweeps(tmp_path):
+    # cold: fresh backend + empty cache -> DSE runs, entries persisted
+    cold = repro.integrate("edge_npu", cache_dir=tmp_path)
+    mod = cold.compile(_conv_dense_graph(), mode="proposed")
+    assert np.array_equal(mod.run({"x": X})[0], REF)
+    assert cold.scheduler.n_solver_calls > 0
+    assert cold.schedule_cache.stats.misses > 0
+    assert cold.schedule_cache.file.exists()
+
+    # warm: FRESH backend, FRESH process-equivalent state -> zero DSE sweeps
+    warm = repro.integrate("edge_npu", cache_dir=tmp_path)
+    mod2 = warm.compile(_conv_dense_graph(), mode="proposed")
+    assert np.array_equal(mod2.run({"x": X})[0], REF)
+    assert warm.scheduler.n_solver_calls == 0
+    assert warm.schedule_cache.stats.hits >= 2  # conv + dense
+    assert warm.schedule_cache.stats.misses == 0
+
+
+def test_cache_key_separates_modes_and_arch(tmp_path):
+    cache = ScheduleCache(tmp_path)
+    wl = GemmWorkload(N=8, C=8, K=8)
+    edge = make_edge_npu_description()
+    gem = make_gemmini_description()
+    k_edge = cache.key_for(wl, edge, "proposed")
+    assert k_edge != cache.key_for(wl, edge, "naive")
+    assert k_edge != cache.key_for(wl, gem, "proposed")
+    # fingerprint is stable across fresh instantiations of the same desc
+    assert k_edge == cache.key_for(wl, make_edge_npu_description(), "proposed")
+    # MIP- and heuristic-produced schedules never shadow each other
+    assert k_edge != cache.key_for(wl, edge, "proposed", solver="heuristic")
+
+
+def test_cache_concurrent_writers_merge(tmp_path):
+    backend = repro.integrate("edge_npu", cache=False)
+    wl_a = GemmWorkload(N=16, C=8, K=8, name="a")
+    wl_b = GemmWorkload(N=24, C=8, K=8, name="b")
+    ra = backend.scheduler.schedule(wl_a)
+    rb = backend.scheduler.schedule(wl_b)
+
+    # two cache instances simulate two processes sharing the cache dir:
+    # both loaded before either wrote, then write interleaved
+    proc_a = ScheduleCache(tmp_path)
+    proc_b = ScheduleCache(tmp_path)
+    proc_b.put("key_b", rb)
+    proc_b.flush()
+    proc_a.put("key_a", ra)
+    proc_a.flush()  # must not clobber proc_b's entry on disk
+
+    merged = ScheduleCache(tmp_path)
+    assert merged.get("key_a") is not None
+    assert merged.get("key_b") is not None
+
+
+def test_cache_clear_empties_disk_tier(tmp_path):
+    backend = repro.integrate("edge_npu", cache=False)
+    r = backend.scheduler.schedule(GemmWorkload(N=16, C=8, K=8, name="c"))
+    cache = ScheduleCache(tmp_path)
+    cache.put("k", r)
+    cache.flush()
+    cache.clear()
+    reloaded = ScheduleCache(tmp_path)
+    assert len(reloaded) == 0
+    assert reloaded.get("k") is None
+
+
+def test_cache_unwritable_location_degrades_to_memory():
+    backend = repro.integrate("edge_npu", cache_dir="/proc/no_such_dir/cache")
+    with pytest.warns(RuntimeWarning, match="not persistable"):
+        mod = backend.compile(_conv_dense_graph(), mode="proposed")
+    assert np.array_equal(mod.run({"x": X})[0], REF)  # compile never fails
+    assert backend.schedule_cache.path is None  # degraded to memory tier
+    assert len(backend.schedule_cache) == 2
+
+
+def test_cache_survives_corrupt_file(tmp_path):
+    cache = ScheduleCache(tmp_path)
+    cache.file.parent.mkdir(parents=True, exist_ok=True)
+    cache.file.write_text("{not json")
+    reloaded = ScheduleCache(tmp_path)  # must not raise
+    assert len(reloaded) == 0
+
+
+def test_cache_modes_all_cached(tmp_path):
+    backend = repro.integrate("edge_npu", cache_dir=tmp_path)
+    for mode in ("proposed", "c_toolchain", "naive"):
+        backend.compile(_conv_dense_graph(), mode=mode)
+    assert backend.schedule_cache.stats.puts == 6  # 2 gemm nodes x 3 modes
+    warm = repro.integrate("edge_npu", cache_dir=tmp_path)
+    for mode in ("proposed", "c_toolchain", "naive"):
+        mod = warm.compile(_conv_dense_graph(), mode=mode)
+        assert np.array_equal(mod.run({"x": X})[0], REF)
+    assert warm.scheduler.n_solver_calls == 0
+    assert warm.schedule_cache.stats.misses == 0
+
+
+# -- parallel DSE ---------------------------------------------------------------
+
+
+def test_parallel_dse_matches_serial():
+    wl = GemmWorkload(N=96, C=72, K=24, in_bytes=1, w_bytes=1, out_bytes=4)
+    serial = repro.integrate("edge_npu", cache=False).scheduler
+    parallel = repro.integrate("edge_npu", cache=False, parallel_dse=True).scheduler
+    assert parallel.parallel
+    rs = serial.schedule(wl)
+    rp = parallel.schedule(wl)
+    assert rs.best == rp.best
+    assert rs.report.total_cycles == rp.report.total_cycles
+    assert rs.n_candidates == rp.n_candidates
+
+
+# -- acceptance: integrate() by name needs no compiler-internal edits ----------
+
+
+def test_integrate_by_name_and_by_description_agree():
+    by_name = repro.integrate("edge_npu", cache=False)
+    by_desc = repro.integrate(make_edge_npu_description(), cache=False)
+    assert by_name.desc.fingerprint() == by_desc.desc.fingerprint()
+    m1 = by_name.compile(_conv_dense_graph(), mode="proposed")
+    m2 = by_desc.compile(_conv_dense_graph(), mode="proposed")
+    assert np.array_equal(m1.run({"x": X})[0], m2.run({"x": X})[0])

@@ -14,6 +14,7 @@ def main() -> None:
         kernels_bench,
         roofline,
         table1_loc,
+        table2_bench,
         table2_latency,
     )
 
@@ -40,6 +41,18 @@ def main() -> None:
             (time.perf_counter() - t0) * 1e6,
             f"prop/ctool={last['prop/ctool']:.3f};naive/ctool={last['naive/ctool']:.1f};"
             f"toycar_naive/ctool={t2['toycar']['naive/ctool']:.1f}",
+        )
+    )
+
+    # -- Table 2 at model scale: zoo x modes x accelerators -------------------
+    t0 = time.perf_counter()
+    zoo = table2_bench.main(["--smoke"])
+    csv_rows.append(
+        (
+            "table2_model_zoo",
+            (time.perf_counter() - t0) * 1e6,
+            f"cells={len(zoo['rows'])};"
+            f"best_run_many_speedup={zoo['summary']['best_run_many_speedup']:.2f}x",
         )
     )
 

@@ -1,0 +1,201 @@
+"""Table-2 model-zoo benchmark: whole networks x three backends x
+accelerators, through the planned graph executor.
+
+For every (zoo model, accelerator, mode) cell this harness reports
+
+  * **modeled cycles** (accel / host / total) from the compiled module's
+    cycle model — the paper's Table-2 axis: proposed ~= C toolchain,
+    naive BYOC blown up by unfolded preprocessing + unfused epilogues;
+  * **wall-clock run latency** of the planned executor (``run_many``)
+    versus the legacy per-node interpreter over the same feeds — the
+    serving-path axis the planned executor adds.
+
+Functional correctness is asserted before any timing: the planned path
+must be bit-exact with the legacy interpreter in every cell, and with the
+graph reference semantics on the numpy-exact targets.
+
+Results are written to ``BENCH_table2.json``.  ``--smoke`` runs a reduced
+matrix with minimal reps (CI); the full run asserts the paper's cycle
+orderings and a >= 2x repeated-run speedup on at least one zoo model.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import numpy as np
+
+import repro
+from repro.core import ir
+from repro.core.pipeline import MODES
+from repro.core.zoo import ZOO, get_model, model_names
+
+#: targets whose executors are pure numpy — bit-exact vs. the graph
+#: reference.  The TPU path computes through bf16/XLA for non-legalized
+#: ops, so it is held only to planned == legacy.
+NUMPY_EXACT = {"gemmini", "edge_npu"}
+
+SMOKE_MODELS = ("mlp_tiny", "qcnn")
+SMOKE_ACCELERATORS = {"gemmini", "edge_npu"}
+
+
+def _best_of(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_cell(backend, model, mode: str, *, smoke: bool) -> dict:
+    mod = backend.compile(model.build(), mode=mode)
+    feeds = model.feeds(seed=1)
+
+    # -- correctness gate ---------------------------------------------------
+    planned = mod.run(feeds)
+    legacy = mod.run(feeds, use_plan=False)
+    for p, l in zip(planned, legacy):
+        assert np.array_equal(p, l), (
+            f"{model.name}/{backend.desc.name}/{mode}: planned executor "
+            f"diverges from the legacy interpreter"
+        )
+    if backend.desc.name in NUMPY_EXACT:
+        ref = ir.execute_graph(model.build(), feeds)
+        for p, r in zip(planned, ref):
+            assert np.array_equal(p, r), (
+                f"{model.name}/{backend.desc.name}/{mode}: executor diverges "
+                f"from graph reference semantics"
+            )
+
+    cycles = mod.modeled_cycles()
+
+    # -- wall clock: size the batch so one measurement is ~0.2s -------------
+    t0 = time.perf_counter()
+    mod.run(feeds)
+    t_single = max(time.perf_counter() - t0, 1e-6)
+    target_s = 0.02 if smoke else 0.2
+    n_feeds = int(min(max(target_s / t_single, 3), 300))
+    feeds_list = [model.feeds(seed=s) for s in range(n_feeds)]
+    reps = 2 if smoke else 5
+    mod.run_many(feeds_list)  # warm both paths
+    mod.run_many(feeds_list, use_plan=False)
+    t_planned = _best_of(lambda: mod.run_many(feeds_list), reps) / n_feeds
+    t_legacy = (
+        _best_of(lambda: mod.run_many(feeds_list, use_plan=False), reps) / n_feeds
+    )
+    return {
+        "model": model.name,
+        "accelerator": backend.desc.name,
+        "mode": mode,
+        "modeled_cycles": cycles,
+        "planned_us": t_planned * 1e6,
+        "legacy_us": t_legacy * 1e6,
+        "run_many_speedup": t_legacy / t_planned,
+        "n_feeds": n_feeds,
+        "reps": reps,
+    }
+
+
+def run(models: list[str], *, smoke: bool, out: Path) -> dict:
+    rows: list[dict] = []
+    backends: dict[str, object] = {}
+    for name in models:
+        model = get_model(name)
+        accels = [
+            a
+            for a in model.accelerators
+            if not smoke or a in SMOKE_ACCELERATORS
+        ]
+        for acc in accels:
+            if acc not in backends:
+                backends[acc] = repro.integrate(acc, cache=False)
+            for mode in MODES:
+                row = bench_cell(backends[acc], model, mode, smoke=smoke)
+                rows.append(row)
+                print(
+                    f"{row['model']:>18} {row['accelerator']:>8} {row['mode']:>11} "
+                    f"cycles={row['modeled_cycles']['total']:>12,.0f} "
+                    f"planned={row['planned_us']:>9.1f}us "
+                    f"legacy={row['legacy_us']:>9.1f}us "
+                    f"speedup={row['run_many_speedup']:>5.2f}x"
+                )
+
+    best = max(rows, key=lambda r: r["run_many_speedup"])
+    summary = {
+        "best_run_many_speedup": best["run_many_speedup"],
+        "best_speedup_cell": (best["model"], best["accelerator"], best["mode"]),
+    }
+    payload = {
+        "bench": "table2_model_zoo",
+        "smoke": smoke,
+        "host": platform.machine(),
+        "rows": rows,
+        "summary": summary,
+    }
+    out.write_text(json.dumps(payload, indent=2))
+    print(f"\nwrote {out} ({len(rows)} cells); "
+          f"best run_many speedup {best['run_many_speedup']:.2f}x on "
+          f"{best['model']}/{best['accelerator']}/{best['mode']}")
+
+    # -- Table-2 claims ------------------------------------------------------
+    by_cell = {(r["model"], r["accelerator"], r["mode"]): r for r in rows}
+    for (model, acc, mode), r in by_cell.items():
+        if mode != "proposed":
+            continue
+        ctool = by_cell.get((model, acc, "c_toolchain"))
+        naive = by_cell.get((model, acc, "naive"))
+        if ctool:
+            ratio = r["modeled_cycles"]["total"] / ctool["modeled_cycles"]["total"]
+            assert ratio < 1.2, (
+                f"{model}/{acc}: proposed must match the C toolchain "
+                f"(got {ratio:.2f}x)"
+            )
+        if naive:
+            blowup = naive["modeled_cycles"]["total"] / r["modeled_cycles"]["total"]
+            assert blowup > 1.5, (
+                f"{model}/{acc}: naive BYOC must be substantially slower "
+                f"(got {blowup:.2f}x)"
+            )
+    if not smoke:
+        assert best["run_many_speedup"] >= 2.0, (
+            f"planned executor must reach >= 2x repeated-run speedup on at "
+            f"least one zoo model (best: {best['run_many_speedup']:.2f}x)"
+        )
+    return payload
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced matrix + minimal reps for CI",
+    )
+    ap.add_argument(
+        "--models",
+        nargs="*",
+        default=None,
+        help=f"zoo models to run (default: all; available: {model_names()})",
+    )
+    ap.add_argument(
+        "--out",
+        type=Path,
+        default=Path("BENCH_table2.json"),
+        help="output JSON path",
+    )
+    args = ap.parse_args(argv)
+    models = args.models or (
+        [m for m in SMOKE_MODELS] if args.smoke else model_names()
+    )
+    for m in models:
+        get_model(m)  # fail fast on typos
+    return run(models, smoke=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

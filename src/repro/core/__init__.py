@@ -11,6 +11,7 @@ cache."""
 from repro.core.accel import AcceleratorDescription
 from repro.core.arch_spec import ArchSpec, GemmWorkload, conv2d_as_gemm
 from repro.core.configurators import build_backend
+from repro.core.pipeline import CompiledModule, ExecutionPlan
 from repro.core.registry import (
     REGISTRY,
     AcceleratorRegistry,
@@ -28,6 +29,8 @@ __all__ = [
     "AcceleratorDescription",
     "AcceleratorRegistry",
     "ArchSpec",
+    "CompiledModule",
+    "ExecutionPlan",
     "ExtendedCosaScheduler",
     "GemmWorkload",
     "IntegrationError",

@@ -96,7 +96,8 @@ class Graph:
                 return
             seen[n] = False
             for i in n.inputs:
-                visit(i)
+                if i is not None:  # optional operands (e.g. absent bias)
+                    visit(i)
             seen[n] = True
             order.append(n)
 
@@ -114,7 +115,8 @@ class Graph:
         cons: dict[Node, list[Node]] = {n: [] for n in self.toposort()}
         for n in self.toposort():
             for i in n.inputs:
-                cons[i].append(n)
+                if i is not None:
+                    cons[i].append(n)
         return cons
 
     def replace_node(self, old: Node, new: Node) -> None:
@@ -226,6 +228,11 @@ def relu(x: Node) -> Node:
     return Node("relu", [x], shape=x.shape, dtype=x.dtype)
 
 
+def softmax(x: Node, axis: int = -1) -> Node:
+    out_dtype = "float32" if x.dtype.startswith(("int", "uint")) else x.dtype
+    return Node("softmax", [x], {"axis": axis}, shape=x.shape, dtype=out_dtype)
+
+
 def add(a: Node, b: Node) -> Node:
     return Node("add", [a, b], shape=_binary_shape(a, b), dtype=a.dtype)
 
@@ -279,8 +286,15 @@ def execute_node(n: Node, inputs: list[np.ndarray]) -> np.ndarray:
         return np.transpose(inputs[0], n.attrs["perm"])
     if op == "reshape":
         return inputs[0].reshape(n.attrs["shape"])
+    if op == "flatten":
+        return inputs[0].reshape(n.shape)
     if op == "relu":
         return np.maximum(inputs[0], 0)
+    if op == "softmax":
+        ax = n.attrs.get("axis", -1)
+        x = inputs[0].astype(np.float64)
+        e = np.exp(x - np.max(x, axis=ax, keepdims=True))
+        return (e / np.sum(e, axis=ax, keepdims=True)).astype(n.dtype)
     if op == "add":
         return inputs[0] + inputs[1]
     if op == "generalized_dense":

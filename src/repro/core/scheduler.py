@@ -54,6 +54,9 @@ class ExtendedCosaScheduler:
     n_solver_calls: int = 0
     _cache: dict = field(default_factory=dict)
     _lock: threading.Lock = field(default_factory=threading.Lock)
+    # single-flight bookkeeping: workload key -> Event set once the leading
+    # thread has published (or abandoned) the result for that key.
+    _inflight: dict = field(default_factory=dict)
 
     def solver_id(self) -> str:
         """Which solver actually produces schedules — 'mip' only when the
@@ -68,14 +71,30 @@ class ExtendedCosaScheduler:
         return "heuristic"
 
     def schedule(self, workload: GemmWorkload) -> ScheduleResult:
+        """Cached scheduling with single-flight cold misses: when several
+        threads miss on the same workload key concurrently, exactly one runs
+        the DSE sweep; the others wait on it and return the published result
+        (no duplicate sweeps, ``n_solver_calls`` counts each key once).  If
+        the leader fails, one waiter takes over as the new leader."""
         key = workload.key()
-        with self._lock:
-            if key in self._cache:
-                return self._cache[key]
-        result = self._schedule_uncached(workload)
-        with self._lock:
-            self._cache[key] = result
-        return result
+        while True:
+            with self._lock:
+                if key in self._cache:
+                    return self._cache[key]
+                done = self._inflight.get(key)
+                if done is None:
+                    done = self._inflight[key] = threading.Event()
+                    break  # this thread leads the cold miss
+            done.wait()
+        try:
+            result = self._schedule_uncached(workload)
+            with self._lock:
+                self._cache[key] = result
+            return result
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+                done.set()
 
     def _candidates(self) -> list[tuple[Dataflow, tuple, bool]]:
         c = self.arch.constraints

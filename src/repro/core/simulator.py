@@ -104,10 +104,13 @@ def simulate(
 
     busy = compute_cycles + overhead_cycles
     if schedule.double_buffer:
-        # DMA overlapped with compute; pay one leading tile fill.
+        # DMA overlapped with compute; pay one leading tile fill of the
+        # outermost on-chip buffer.  An arch with no buffered level has no
+        # tile to pre-fill (there is nothing to double-buffer *into*), so
+        # the lead term is zero rather than a meaningless PE-level
+        # (level-0) footprint.
         lead = (
-            schedule.level_footprint(outer_level)
-            / bpc
+            schedule.level_footprint(outer_level) / bpc if buffered else 0.0
         )
         core = max(busy, dma_cycles) + lead
     else:

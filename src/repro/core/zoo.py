@@ -1,0 +1,229 @@
+"""Model zoo: multi-layer workloads for the Table-2 end-to-end benchmark.
+
+The paper's headline evaluation (§4, Table 2) compares whole *networks*,
+not single GEMMs.  This module lowers three representative network classes
+into core IR graphs so the benchmark harness, the planned-executor
+equivalence tests, and the docs all measure the same artifacts:
+
+  * ``qcnn``        — int8 conv+conv+dense CNN (quantized TFLite-style op
+                      chains, conv via its im2col GEMM lowering);
+  * ``toycar_mlp``  — the MLPerf-Tiny ToyCar autoencoder of the paper's
+                      Table 2 (640 -> 128x3 -> 8 -> 128x3 -> 640, int8);
+  * ``mlp_tiny``    — a serving-size MLP whose layers each fit one PE tile;
+                      the repeated-run (``run_many``) latency demo;
+  * ``transformer_block`` — a quantized single-head transformer encoder
+                      block (QKV/attention/output-projection/FFN GEMMs,
+                      host softmax), shapes taken from the musicgen smoke
+                      config in ``repro.configs``.
+
+Every model feeds float weights through the registered constant
+preprocessing chain (transpose + quantize), so the ``naive`` mode pays for
+weight preparation at run time exactly as the paper's naive BYOC baseline
+does.  Graphs are mutated by ``compile`` — ``build()`` returns a fresh
+graph per call.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from repro.core import ir
+
+ACCELERATORS = ("gemmini", "edge_npu", "tpu_v5e")
+
+# the paper's ToyCar autoencoder layer widths (MLPerf-Tiny anomaly det.)
+TOYCAR_LAYERS = (640, 128, 128, 128, 8, 128, 128, 128, 640)
+
+
+@dataclass(frozen=True)
+class ZooModel:
+    name: str
+    description: str
+    build: Callable[[], ir.Graph]
+    input_name: str
+    input_shape: tuple[int, ...]
+    input_dtype: str
+    #: accelerators this model lowers to (conv has no TPU kernel lowering)
+    accelerators: tuple[str, ...]
+    n_gemms: int
+
+    def feeds(self, seed: int = 0) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-128, 128, size=self.input_shape)
+        return {self.input_name: x.astype(self.input_dtype)}
+
+
+def _qdense(h: ir.Node, w_fp: np.ndarray, b: np.ndarray, *, w_scale: float,
+            rq_scale: float, clip_lo: int = -128) -> ir.Node:
+    """One quantized dense layer as the full TFLite-style op sequence.
+
+    Float weights enter through the registered constant preprocessing
+    (transpose to (C, K), quantize to int8); ``clip_lo=0`` turns the
+    saturating clip into a fused quantized ReLU.
+    """
+    w_q = ir.quantize(ir.transpose(ir.const(w_fp), (1, 0)), scale=w_scale)
+    bias = ir.const(b)
+    d = ir.dense(h, w_q)
+    return ir.clip(ir.requantize(ir.bias_add(d, bias), scale=rq_scale),
+                   lo=clip_lo, hi=127)
+
+
+def _qconv(h: ir.Node, w_q: np.ndarray, b: np.ndarray, *, stride: int = 1,
+           rq_scale: float = 0.05) -> ir.Node:
+    conv = ir.conv2d(h, ir.const(w_q), stride=stride)
+    return ir.clip(ir.requantize(ir.bias_add(conv, ir.const(b)), scale=rq_scale))
+
+
+def mlp_graph(layers=TOYCAR_LAYERS, seed: int = 0, name: str = "mlp") -> ir.Graph:
+    """Quantized MLP: each layer dense -> bias_add -> requantize -> clip."""
+    rng = np.random.default_rng(seed)
+    x = ir.input_((1, layers[0]), "int8", name="x")
+    h = x
+    for i in range(len(layers) - 1):
+        d_in, d_out = layers[i], layers[i + 1]
+        w_fp = (rng.normal(size=(d_out, d_in)) * 0.05).astype(np.float32)
+        b = rng.integers(-64, 64, size=(d_out,)).astype(np.int32)
+        h = _qdense(h, w_fp, b, w_scale=0.05, rq_scale=1.0 / 64.0)
+    return ir.Graph([h], name=name)
+
+
+def qcnn_graph(seed: int = 0) -> ir.Graph:
+    """int8 CNN: conv(3x3, 8->16) -> conv(3x3, 16->16) -> flatten ->
+    dense(1024->32) -> dense(32->10); quantized op chains throughout."""
+    rng = np.random.default_rng(seed)
+    x = ir.input_((1, 12, 12, 8), "int8", name="x")
+    h = _qconv(
+        x,
+        rng.integers(-8, 8, (3, 3, 8, 16)).astype(np.int8),
+        rng.integers(-50, 50, (16,)).astype(np.int32),
+    )
+    h = _qconv(
+        h,
+        rng.integers(-8, 8, (3, 3, 16, 16)).astype(np.int8),
+        rng.integers(-50, 50, (16,)).astype(np.int32),
+        rq_scale=0.04,
+    )
+    h = ir.flatten(h)  # (1, 8*8*16) zero-copy view
+    h = _qdense(
+        h,
+        (rng.normal(size=(32, 1024)) * 0.02).astype(np.float32),
+        rng.integers(-50, 50, (32,)).astype(np.int32),
+        w_scale=0.02,
+        rq_scale=0.1,
+    )
+    h = _qdense(
+        h,
+        (rng.normal(size=(10, 32)) * 0.05).astype(np.float32),
+        rng.integers(-50, 50, (10,)).astype(np.int32),
+        w_scale=0.05,
+        rq_scale=0.25,
+    )
+    return ir.Graph([h], name="qcnn")
+
+
+def transformer_block_graph(seed: int = 0, seq: int = 16) -> ir.Graph:
+    """Quantized single-head transformer encoder block.
+
+    d_model / d_ff come from the musicgen smoke config in ``repro.configs``
+    (64 / 128), the same shapes the JAX model stack trains at smoke scale.
+    Activation-activation GEMMs (scores = q @ k^T, context = probs @ v) are
+    raw int8 dense ops — scheduled on the accelerator but with their
+    epilogues (dequantize/softmax/quantize) on the host, which is exactly
+    the structure BYOC partitioning produces for attention.
+    """
+    from repro.configs.musicgen_medium import smoke_config
+
+    cfg = smoke_config()
+    d_model, d_ff = cfg.d_model, cfg.d_ff
+    rng = np.random.default_rng(seed)
+    x = ir.input_((seq, d_model), "int8", name="x")
+
+    def proj(h, d_in, d_out, clip_lo=-128):
+        return _qdense(
+            h,
+            (rng.normal(size=(d_out, d_in)) * 0.05).astype(np.float32),
+            rng.integers(-64, 64, size=(d_out,)).astype(np.int32),
+            w_scale=0.05,
+            rq_scale=1.0 / 64.0,
+            clip_lo=clip_lo,
+        )
+
+    q = proj(x, d_model, d_model)
+    k = proj(x, d_model, d_model)
+    v = proj(x, d_model, d_model)
+    # attention: int8 scores GEMM, softmax on the host in float
+    scores = ir.dense(q, ir.transpose(k, (1, 0)))  # (seq, seq) int32
+    probs = ir.quantize(
+        ir.softmax(ir.dequantize(scores, scale=1.0 / (64.0 * d_model))),
+        scale=1.0 / 127.0,
+    )
+    ctx = ir.requantize(ir.dense(probs, v), scale=1.0 / 64.0)  # (seq, d) int8
+    attn = proj(ctx, d_model, d_model)
+    h = ir.add(attn, x)
+    # FFN with fused quantized ReLU (clip_lo=0) on the expansion layer
+    f = proj(h, d_model, d_ff, clip_lo=0)
+    f = proj(f, d_ff, d_model)
+    out = ir.add(f, h)
+    return ir.Graph([out], name="transformer_block")
+
+
+ZOO: dict[str, ZooModel] = {
+    m.name: m
+    for m in (
+        ZooModel(
+            name="qcnn",
+            description="int8 conv+conv+dense CNN (conv via im2col GEMM)",
+            build=qcnn_graph,
+            input_name="x",
+            input_shape=(1, 12, 12, 8),
+            input_dtype="int8",
+            accelerators=("gemmini", "edge_npu"),
+            n_gemms=4,
+        ),
+        ZooModel(
+            name="toycar_mlp",
+            description="MLPerf-Tiny ToyCar autoencoder (paper Table 2)",
+            build=lambda: mlp_graph(TOYCAR_LAYERS, name="toycar_mlp"),
+            input_name="x",
+            input_shape=(1, TOYCAR_LAYERS[0]),
+            input_dtype="int8",
+            accelerators=ACCELERATORS,
+            n_gemms=len(TOYCAR_LAYERS) - 1,
+        ),
+        ZooModel(
+            name="mlp_tiny",
+            description="serving-size MLP; every layer fits one PE tile",
+            build=lambda: mlp_graph((16,) * 9, name="mlp_tiny"),
+            input_name="x",
+            input_shape=(1, 16),
+            input_dtype="int8",
+            accelerators=ACCELERATORS,
+            n_gemms=8,
+        ),
+        ZooModel(
+            name="transformer_block",
+            description="quantized single-head transformer encoder block",
+            build=transformer_block_graph,
+            input_name="x",
+            input_shape=(16, 64),
+            input_dtype="int8",
+            accelerators=("gemmini", "edge_npu"),
+            n_gemms=8,
+        ),
+    )
+}
+
+
+def model_names() -> list[str]:
+    return sorted(ZOO)
+
+
+def get_model(name: str) -> ZooModel:
+    try:
+        return ZOO[name]
+    except KeyError:
+        known = ", ".join(model_names())
+        raise KeyError(f"unknown zoo model {name!r}; available: {known}") from None

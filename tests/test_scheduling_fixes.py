@@ -1,0 +1,128 @@
+"""Regression tests for the scheduler single-flight cold-miss fix and the
+simulator double-buffer lead term on buffer-less hierarchies."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.arch_spec import (
+    ArchSpec,
+    GemmWorkload,
+    HardwareConstraints,
+    MemLevel,
+)
+from repro.core.descriptions import make_edge_npu_description
+from repro.core.schedule import Schedule
+from repro.core.scheduler import ExtendedCosaScheduler
+from repro.core.simulator import simulate
+
+
+def test_schedule_cold_miss_is_single_flight():
+    """Regression: concurrent cold misses on the same workload key used to
+    each run a full DSE sweep (check-then-act race), double-counting
+    ``n_solver_calls`` and wasting duplicate solver work."""
+    sched = ExtendedCosaScheduler(make_edge_npu_description().arch, use_mip=False)
+    orig = sched._eval_candidate
+
+    def slow_eval(*args, **kwargs):
+        time.sleep(0.01)  # widen the race window
+        return orig(*args, **kwargs)
+
+    sched._eval_candidate = slow_eval
+    wl = GemmWorkload(N=64, C=64, K=64, name="race")
+    n_threads = 8
+    barrier = threading.Barrier(n_threads)
+    results, errors = [], []
+
+    def worker():
+        try:
+            barrier.wait()
+            results.append(sched.schedule(wl))
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(results) == n_threads
+    assert sched.n_solver_calls == 1  # exactly one DSE sweep ran
+    assert all(r is results[0] for r in results)  # everyone got the result
+    assert not sched._inflight  # bookkeeping drained
+
+
+def test_schedule_failed_leader_hands_off():
+    """If the leading thread's sweep raises, a waiter must take over rather
+    than deadlock on the in-flight marker."""
+    sched = ExtendedCosaScheduler(make_edge_npu_description().arch, use_mip=False)
+    orig = sched._eval_candidate
+    fail_once = {"armed": True}
+
+    def flaky_eval(*args, **kwargs):
+        if fail_once["armed"]:
+            fail_once["armed"] = False
+            raise RuntimeError("transient solver failure")
+        return orig(*args, **kwargs)
+
+    sched._eval_candidate = flaky_eval
+    wl = GemmWorkload(N=32, C=32, K=32, name="flaky")
+    with pytest.raises(RuntimeError, match="transient solver failure"):
+        sched.schedule(wl)
+    assert not sched._inflight  # marker released on failure
+    result = sched.schedule(wl)  # retry succeeds as the new leader
+    assert result.best is not None
+    assert sched.n_solver_calls == 2
+
+
+def _bufferless_arch() -> ArchSpec:
+    return ArchSpec(
+        name="bufferless",
+        levels=(
+            MemLevel("pe", size_bytes=0, holds=()),
+            MemLevel("dram", size_bytes=0, bytes_per_cycle=8.0),
+        ),
+        constraints=HardwareConstraints(pe_dim=8),
+    )
+
+
+def test_double_buffer_lead_skipped_without_buffered_levels():
+    """Regression: with no buffered levels, the lead term used to charge a
+    PE-level (level-0) footprint fill, which models nothing physical."""
+    arch = _bufferless_arch()
+    wl = GemmWorkload(N=8, C=8, K=8, name="tiny")
+    ones = {"N": 1, "C": 1, "K": 1}
+    sched = Schedule(
+        workload=wl,
+        arch_name=arch.name,
+        dataflow="WS",
+        temporal=({"N": 8, "C": 8, "K": 8}, dict(ones)),
+        spatial=(dict(ones), dict(ones)),
+        memory_shares=(1 / 3, 1 / 3, 1 / 3),
+        double_buffer=True,
+        loop_order=("K", "C", "N"),
+    )
+    rep = simulate(sched, arch)
+    # double-buffered core time is exactly max(busy, dma): no lead fill
+    busy = rep.compute_cycles + rep.overhead_cycles
+    assert rep.total_cycles == pytest.approx(max(busy, rep.dma_cycles))
+    # sanity: the same schedule without double buffering is additive
+    import dataclasses
+
+    rep2 = simulate(dataclasses.replace(sched, double_buffer=False), arch)
+    assert rep2.total_cycles == pytest.approx(busy + rep2.dma_cycles)
+
+
+def test_double_buffer_lead_still_charged_with_buffers():
+    """The buffered-level lead fill is still modeled on normal hierarchies."""
+    desc = make_edge_npu_description()
+    sched = ExtendedCosaScheduler(desc.arch, use_mip=False)
+    result = sched.schedule(GemmWorkload(N=64, C=64, K=64, name="lead"))
+    s = result.best
+    if not s.double_buffer:
+        pytest.skip("best schedule does not double-buffer")
+    rep = simulate(s, desc.arch)
+    busy = rep.compute_cycles + rep.overhead_cycles
+    assert rep.total_cycles > max(busy, rep.dma_cycles)

@@ -32,7 +32,7 @@ import numpy as np
 import repro
 from repro.core import ir
 from repro.core.pipeline import MODES
-from repro.core.zoo import ZOO, get_model, model_names
+from repro.core.zoo import get_model, model_names
 
 #: targets whose executors are pure numpy — bit-exact vs. the graph
 #: reference.  The TPU path computes through bf16/XLA for non-legalized
@@ -59,8 +59,8 @@ def bench_cell(backend, model, mode: str, *, smoke: bool) -> dict:
     # -- correctness gate ---------------------------------------------------
     planned = mod.run(feeds)
     legacy = mod.run(feeds, use_plan=False)
-    for p, l in zip(planned, legacy):
-        assert np.array_equal(p, l), (
+    for p, leg in zip(planned, legacy):
+        assert np.array_equal(p, leg), (
             f"{model.name}/{backend.desc.name}/{mode}: planned executor "
             f"diverges from the legacy interpreter"
         )
@@ -98,6 +98,9 @@ def bench_cell(backend, model, mode: str, *, smoke: bool) -> dict:
         "run_many_speedup": t_legacy / t_planned,
         "n_feeds": n_feeds,
         "reps": reps,
+        # per-pass rewrite/timing instrumentation from the PassManager run
+        # that lowered this cell (lands in the uploaded CI artifact)
+        "passes": mod.pass_report.to_dict() if mod.pass_report else None,
     }
 
 
@@ -126,9 +129,18 @@ def run(models: list[str], *, smoke: bool, out: Path) -> dict:
                 )
 
     best = max(rows, key=lambda r: r["run_many_speedup"])
+    pass_totals: dict[str, dict[str, float]] = {}
+    for r in rows:
+        for p in (r.get("passes") or {}).get("passes", ()):
+            agg = pass_totals.setdefault(
+                p["name"], {"rewrites": 0, "duration_ms": 0.0}
+            )
+            agg["rewrites"] += p["rewrites"]
+            agg["duration_ms"] += p["duration_ms"]
     summary = {
         "best_run_many_speedup": best["run_many_speedup"],
         "best_speedup_cell": (best["model"], best["accelerator"], best["mode"]),
+        "pass_totals": pass_totals,
     }
     payload = {
         "bench": "table2_model_zoo",

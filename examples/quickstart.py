@@ -43,8 +43,13 @@ def main():
             f"cycles={cycles['total']:>12,.0f} (host={cycles['host']:,.0f})"
         )
 
-    # inspect the schedule the extended-CoSA MIP picked
+    # what the staged pass pipeline actually did (the abstraction claim,
+    # visible: every rewrite is a named, counted, timed unit)
     mod = backend.compile(quantized_dense_graph(), mode="proposed")
+    print()
+    print(mod.pass_report.summary())
+
+    # inspect the schedule the extended-CoSA MIP picked
     for name, sched in mod.schedules().items():
         print(f"\nschedule for {name}:")
         for lvl in sched["levels"]:

@@ -27,7 +27,7 @@ def main(model_name: str = "mlp_tiny"):
     planned = module.run_many(traffic)
     legacy = module.run_many(traffic, use_plan=False)
     assert all(
-        np.array_equal(p[0], l[0]) for p, l in zip(planned, legacy)
+        np.array_equal(p[0], leg[0]) for p, leg in zip(planned, legacy)
     ), "planned executor must be bit-exact with the interpreter"
 
     t0 = time.perf_counter()

@@ -11,7 +11,10 @@ cache."""
 from repro.core.accel import AcceleratorDescription
 from repro.core.arch_spec import ArchSpec, GemmWorkload, conv2d_as_gemm
 from repro.core.configurators import build_backend
+from repro.core.pass_manager import PassContext, PassManager, PipelineReport
+from repro.core.passes import frontend_passes, passes_for_mode
 from repro.core.pipeline import CompiledModule, ExecutionPlan
+from repro.core.rewrite import P, Match, OpPattern, RewriteRule, any_, apply_rules, rule
 from repro.core.registry import (
     REGISTRY,
     AcceleratorRegistry,
@@ -34,13 +37,25 @@ __all__ = [
     "ExtendedCosaScheduler",
     "GemmWorkload",
     "IntegrationError",
+    "Match",
+    "OpPattern",
+    "P",
+    "PassContext",
+    "PassManager",
+    "PipelineReport",
     "REGISTRY",
+    "RewriteRule",
     "Schedule",
     "ScheduleCache",
+    "any_",
+    "apply_rules",
     "build_backend",
     "conv2d_as_gemm",
+    "frontend_passes",
     "integrate",
+    "passes_for_mode",
     "register_accelerator",
+    "rule",
     "simulate",
     "validate_description",
     "validate_schedule",

@@ -1,0 +1,307 @@
+"""The planned graph executor: host-op compilation, the slot-indexed
+execution plan, and the compiled module (execution + cycle model).
+
+Split out of the old ``pipeline.py`` monolith so plan building is testable
+without a backend: ``build_plan(graph, {})`` lowers any host-only graph.
+``repro.core.pipeline`` re-exports everything here for compatibility.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.accel import AcceleratorDescription
+from repro.core.ir import Graph, Node, execute_node, gelu_ref, max_pool2d_ref
+from repro.core.simulator import simulate
+from repro.core.strategy import Strategy, dtype_bytes
+
+# Zero-copy view ops: free in the cycle model (no data movement, the host
+# just reinterprets the buffer).  One canonical set so the cycle model and
+# the layout-op class below can never disagree about what a view is.
+FREE_VIEW_OPS = {"reshape", "flatten"}
+
+# host-op cost classes for the cycle model
+_LAYOUT_OPS = {"transpose", "im2col", "quantize"} | FREE_VIEW_OPS
+_EPILOGUE_OPS = {
+    "requantize",
+    "clip",
+    "bias_add",
+    "dequantize",
+    "relu",
+    "gelu",
+    "add",
+    "sub",
+    "mul",
+    "softmax",
+    "max_pool2d",
+}
+
+
+@dataclass
+class CompiledOp:
+    node: Node
+    strategy: Strategy
+    executor: Callable[..., np.ndarray]
+
+
+def compile_host_op(n: Node) -> Callable[..., np.ndarray]:
+    """Specialize one host op into a direct closure: attrs/dtype lookups and
+    the ``execute_node`` if-chain dispatch happen here, once, at plan-build
+    time instead of on every call.  Semantics are bit-identical to
+    ``execute_node`` (tests/test_host_ops.py holds both paths to that for
+    every op in ``ir.HOST_OPS``)."""
+    op, attrs, dtype = n.op, n.attrs, n.dtype
+    if op == "relu":
+        return lambda x: np.maximum(x, 0)
+    if op == "gelu":
+        return lambda x: gelu_ref(x).astype(dtype)
+    if op == "add":
+        return lambda a, b: a + b
+    if op == "sub":
+        return lambda a, b: a - b
+    if op == "mul":
+        return lambda a, b: a * b
+    if op == "clip":
+        lo, hi = attrs["lo"], attrs["hi"]
+        return lambda x: np.clip(x, lo, hi).astype(dtype)
+    if op == "requantize":
+        scale = attrs["scale"]
+        if dtype.startswith(("int", "uint")):
+            info = np.iinfo(dtype)
+            lo, hi = info.min, info.max
+            return lambda x: np.clip(
+                np.round(x.astype(np.float64) * scale), lo, hi
+            ).astype(dtype)
+        return lambda x: np.round(x.astype(np.float64) * scale).astype(dtype)
+    if op == "quantize":
+        scale = attrs["scale"]
+        return lambda x: np.clip(np.round(x / scale), -128, 127).astype(dtype)
+    if op == "dequantize":
+        scale = attrs["scale"]
+        return lambda x: x.astype(np.float32) * scale
+    if op == "transpose":
+        perm = attrs["perm"]
+        return lambda x: np.transpose(x, perm)
+    if op in FREE_VIEW_OPS:
+        shape = attrs["shape"] if op == "reshape" else n.shape
+        return lambda x: x.reshape(shape)
+    if op == "max_pool2d":
+        size, stride = attrs["size"], attrs["stride"]
+        return lambda x: max_pool2d_ref(x, size, stride)
+    if op == "bias_add":
+        if dtype.startswith("int"):
+            return lambda x, b: (
+                x.astype(np.int64) + b.astype(np.int64)
+            ).astype(dtype)
+        return lambda x, b: x + b
+    if op == "softmax":
+        ax = attrs.get("axis", -1)
+
+        def _softmax(x):
+            xf = x.astype(np.float64)
+            e = np.exp(xf - np.max(xf, axis=ax, keepdims=True))
+            return (e / np.sum(e, axis=ax, keepdims=True)).astype(dtype)
+
+        return _softmax
+    # anything else (dense/conv left on the host, exotic ops): fall back to
+    # the reference interpreter for this node only.
+    return lambda *ins, _n=n: execute_node(_n, list(ins))
+
+
+# arena slot 0 permanently holds None so optional (absent) operands can be
+# addressed like any other input slot.
+_NONE_SLOT = 0
+
+
+@dataclass
+class PlanStep:
+    """One computed node: write ``fn(*arena[arg_slots])`` into ``slot``."""
+
+    slot: int
+    fn: Callable[..., np.ndarray]
+    arg_slots: tuple[int, ...]
+    op: str
+    name: str
+
+
+@dataclass
+class ExecutionPlan:
+    """Compile-time execution plan: topological op order, input/output slot
+    indices, and pre-resolved per-step callables over a flat buffer arena.
+
+    ``CompiledModule.run`` walks ``steps`` as a flat loop — no graph
+    traversal, no dict-of-Node hashing, no per-call op dispatch.  Constants
+    are materialized into the arena once, when it is created, and survive
+    across calls (the arena is reused by ``run_many``)."""
+
+    n_slots: int
+    input_slots: tuple[tuple[str, int], ...]  # (feed name, arena slot)
+    const_slots: tuple[tuple[int, np.ndarray], ...]
+    steps: tuple[PlanStep, ...]
+    output_slots: tuple[int, ...]
+
+    def __post_init__(self):
+        # flat (slot, fn, arg_slots) triples: the hot loop avoids dataclass
+        # attribute lookups entirely.
+        self._fast_steps = tuple((s.slot, s.fn, s.arg_slots) for s in self.steps)
+
+    def new_arena(self) -> list:
+        arena: list = [None] * self.n_slots
+        for slot, value in self.const_slots:
+            arena[slot] = value
+        return arena
+
+    def execute(self, feeds: dict[str, np.ndarray], arena: list) -> list[np.ndarray]:
+        for name, slot in self.input_slots:
+            try:
+                arena[slot] = np.asarray(feeds[name])
+            except KeyError:
+                raise KeyError(f"missing feed for input {name!r}") from None
+        for slot, fn, arg_slots in self._fast_steps:
+            arena[slot] = fn(*[arena[i] for i in arg_slots])
+        return [arena[i] for i in self.output_slots]
+
+
+def build_plan(graph: Graph, ops: dict[Node, CompiledOp]) -> ExecutionPlan:
+    """Lower a compiled graph to its execution plan (one toposort, ever)."""
+    order = graph.toposort()
+    slot_of: dict[Node, int] = {n: i + 1 for i, n in enumerate(order)}
+    input_slots: list[tuple[str, int]] = []
+    const_slots: list[tuple[int, np.ndarray]] = []
+    steps: list[PlanStep] = []
+    for n in order:
+        slot = slot_of[n]
+        if n.op == "input":
+            input_slots.append((n.name, slot))
+        elif n.op == "const":
+            const_slots.append((slot, n.value))
+        else:
+            arg_slots = tuple(
+                _NONE_SLOT if i is None else slot_of[i] for i in n.inputs
+            )
+            if n in ops:
+                fn = ops[n].executor
+                # accelerator executors may offer plan-time specialization
+                # over inputs that are compile-time constants (pre-padded
+                # weight panels, pre-widened bias).
+                specialize = getattr(fn, "specialize_consts", None)
+                if specialize is not None:
+                    consts = {
+                        i: inp.value
+                        for i, inp in enumerate(n.inputs)
+                        if inp is not None and inp.is_const()
+                    }
+                    specialized = specialize(consts) if consts else None
+                    if specialized is not None:
+                        fn = specialized
+            else:
+                fn = compile_host_op(n)
+            steps.append(PlanStep(slot, fn, arg_slots, n.op, n.name))
+    return ExecutionPlan(
+        n_slots=len(order) + 1,
+        input_slots=tuple(input_slots),
+        const_slots=tuple(const_slots),
+        steps=tuple(steps),
+        output_slots=tuple(slot_of[o] for o in graph.outputs),
+    )
+
+
+@dataclass
+class CompiledModule:
+    graph: Graph
+    desc: AcceleratorDescription
+    mode: str
+    ops: dict[Node, CompiledOp] = field(default_factory=dict)
+    # built once by compile(); None only for hand-assembled modules.
+    plan: ExecutionPlan | None = None
+    #: PipelineReport from the PassManager run that lowered the graph
+    #: (None for hand-assembled modules).
+    pass_report: Any = None
+    _arena: list | None = field(default=None, repr=False)
+
+    # -- execution ---------------------------------------------------------
+    def finalize(self) -> "ExecutionPlan":
+        """Build (or return) the execution plan and its reusable arena."""
+        if self.plan is None:
+            self.plan = build_plan(self.graph, self.ops)
+        if self._arena is None:
+            self._arena = self.plan.new_arena()
+        return self.plan
+
+    def run(
+        self, feeds: dict[str, np.ndarray], *, use_plan: bool = True
+    ) -> list[np.ndarray]:
+        """Execute the module.  ``use_plan=False`` runs the legacy per-node
+        interpreter (kept for planned-vs-interpreted equivalence testing and
+        as the baseline of ``benchmarks/table2_bench.py``)."""
+        if not use_plan:
+            return self._run_interpreted(feeds)
+        plan = self.finalize()
+        return plan.execute(feeds, self._arena)
+
+    def run_many(
+        self, feeds_list: list[dict[str, np.ndarray]], *, use_plan: bool = True
+    ) -> list[list[np.ndarray]]:
+        """Repeated invocation over a list of feeds (serving-style traffic);
+        the plan and buffer arena are built once and reused for every call.
+        Not thread-safe: concurrent callers must hold their own module."""
+        if not use_plan:
+            return [self._run_interpreted(f) for f in feeds_list]
+        plan = self.finalize()
+        arena = self._arena
+        execute = plan.execute
+        return [execute(feeds, arena) for feeds in feeds_list]
+
+    def _run_interpreted(self, feeds: dict[str, np.ndarray]) -> list[np.ndarray]:
+        """The pre-plan per-node interpreter: re-toposorts and re-dispatches
+        on every call."""
+        vals: dict[Node, np.ndarray] = {}
+        for n in self.graph.toposort():
+            if n.op == "input":
+                vals[n] = np.asarray(feeds[n.name])
+            else:
+                ins = [vals[i] if i is not None else None for i in n.inputs]
+                if n in self.ops:
+                    vals[n] = self.ops[n].executor(*ins)
+                else:
+                    vals[n] = execute_node(n, ins)
+        return [vals[o] for o in self.graph.outputs]
+
+    # -- cycle model ---------------------------------------------------------
+    def modeled_cycles(self) -> dict[str, float]:
+        """Total modeled cycles: accelerator ops via the schedule simulator,
+        residual host ops (unfolded preprocessing / unfused epilogues in
+        naive mode) via per-byte host costs."""
+        arch = self.desc.arch
+        accel = 0.0
+        host = 0.0
+        fused = self.mode != "naive"
+        for n in self.graph.toposort():
+            if n in self.ops:
+                rep = simulate(
+                    self.ops[n].strategy.schedule,
+                    arch,
+                    folded_preprocessing=True,  # graph structure carries it
+                    fused_loop_instructions=fused,
+                )
+                accel += rep.total_cycles
+            elif n.op in _LAYOUT_OPS and n.op not in FREE_VIEW_OPS:
+                nbytes = math.prod(n.shape) * dtype_bytes(n.dtype)
+                host += nbytes * arch.host_preproc_cycles_per_byte
+            elif n.op in _EPILOGUE_OPS:
+                in_bytes = (
+                    math.prod(n.inputs[0].shape) * dtype_bytes(n.inputs[0].dtype)
+                    if n.inputs
+                    else 0
+                )
+                host += in_bytes * arch.host_epilogue_cycles_per_byte
+        return {"accel": accel, "host": host, "total": accel + host}
+
+    def schedules(self) -> dict[str, Any]:
+        return {
+            n.name: op.strategy.schedule.to_dict() for n, op in self.ops.items()
+        }

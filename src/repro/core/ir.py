@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterable
+from typing import Any
 
 import numpy as np
 
@@ -40,6 +40,7 @@ HOST_OPS = {
     "flatten",
     "im2col",
     "softmax",
+    "max_pool2d",
 }
 
 # Multi-op sequences the legalizer fuses into these generalized operators.
@@ -80,12 +81,36 @@ class Node:
 
 @dataclass
 class Graph:
-    """A single-output dataflow graph (multi-output via a tuple node)."""
+    """A single-output dataflow graph (multi-output via the outputs list).
+
+    The topological order and the consumers map are cached: the rewrite
+    engine and the passes walk them every round, and recomputing a full
+    DFS per query made the old fixed-point loops O(n^2).  Anything that
+    mutates graph structure *through the Graph API* (``replace_node``)
+    invalidates the caches automatically; code that rewires ``Node.inputs``
+    or reassigns ``outputs`` directly must call ``invalidate()``.
+    """
 
     outputs: list[Node]
     name: str = "graph"
+    _order: list[Node] | None = field(
+        default=None, init=False, repr=False, compare=False
+    )
+    _consumers: dict[Node, list[Node]] | None = field(
+        default=None, init=False, repr=False, compare=False
+    )
+
+    def invalidate(self) -> None:
+        """Drop cached traversal state after a structural mutation."""
+        self._order = None
+        self._consumers = None
 
     def toposort(self) -> list[Node]:
+        """Inputs-before-consumers order.  The returned list is the cache —
+        treat it as read-only (it is replaced, never mutated, so iterating
+        a snapshot across rewrites stays safe)."""
+        if self._order is not None:
+            return self._order
         seen: dict[Node, bool] = {}
         order: list[Node] = []
 
@@ -103,6 +128,7 @@ class Graph:
 
         for out in self.outputs:
             visit(out)
+        self._order = order
         return order
 
     def nodes(self) -> list[Node]:
@@ -112,11 +138,15 @@ class Graph:
         return [n for n in self.toposort() if n.op == "input"]
 
     def consumers(self) -> dict[Node, list[Node]]:
+        """Node -> consuming nodes (read-only; cached with the order)."""
+        if self._consumers is not None:
+            return self._consumers
         cons: dict[Node, list[Node]] = {n: [] for n in self.toposort()}
         for n in self.toposort():
             for i in n.inputs:
                 if i is not None:
                     cons[i].append(n)
+        self._consumers = cons
         return cons
 
     def replace_node(self, old: Node, new: Node) -> None:
@@ -124,6 +154,7 @@ class Graph:
         for n in self.toposort():
             n.inputs = [new if i is old else i for i in n.inputs]
         self.outputs = [new if o is old else o for o in self.outputs]
+        self.invalidate()
 
     def summary(self) -> str:
         lines = [f"graph {self.name}:"]
@@ -228,6 +259,25 @@ def relu(x: Node) -> Node:
     return Node("relu", [x], shape=x.shape, dtype=x.dtype)
 
 
+def gelu(x: Node) -> Node:
+    return Node("gelu", [x], shape=x.shape, dtype=x.dtype)
+
+
+def max_pool2d(x: Node, size: int = 2, stride: int | None = None) -> Node:
+    """NHWC max pooling with a square window (no padding)."""
+    stride = size if stride is None else stride
+    n, h, w, c = x.shape
+    oh = (h - size) // stride + 1
+    ow = (w - size) // stride + 1
+    return Node(
+        "max_pool2d",
+        [x],
+        {"size": size, "stride": stride},
+        shape=(n, oh, ow, c),
+        dtype=x.dtype,
+    )
+
+
 def softmax(x: Node, axis: int = -1) -> Node:
     out_dtype = "float32" if x.dtype.startswith(("int", "uint")) else x.dtype
     return Node("softmax", [x], {"axis": axis}, shape=x.shape, dtype=out_dtype)
@@ -237,9 +287,42 @@ def add(a: Node, b: Node) -> Node:
     return Node("add", [a, b], shape=_binary_shape(a, b), dtype=a.dtype)
 
 
+def sub(a: Node, b: Node) -> Node:
+    return Node("sub", [a, b], shape=_binary_shape(a, b), dtype=a.dtype)
+
+
+def mul(a: Node, b: Node) -> Node:
+    return Node("mul", [a, b], shape=_binary_shape(a, b), dtype=a.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Reference executor (host semantics; used by tests and constant folding).
 # ---------------------------------------------------------------------------
+
+
+def gelu_ref(x: np.ndarray) -> np.ndarray:
+    """The single gelu definition (tanh approximation) every execution path
+    shares — the interpreter, the host-op fast path, and the fused
+    generalized-op epilogues must be bit-identical."""
+    xf = x.astype(np.float64)
+    inner = np.sqrt(2.0 / np.pi) * (xf + 0.044715 * xf**3)
+    return 0.5 * xf * (1.0 + np.tanh(inner))
+
+
+def max_pool2d_ref(x: np.ndarray, size: int, stride: int) -> np.ndarray:
+    """NHWC window max, exact for every dtype (pure comparisons)."""
+    n, h, w, c = x.shape
+    oh = (h - size) // stride + 1
+    ow = (w - size) // stride + 1
+    out = x[:, : oh * stride : stride, : ow * stride : stride, :]
+    for i in range(size):
+        for j in range(size):
+            if i == 0 and j == 0:
+                continue
+            out = np.maximum(
+                out, x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            )
+    return out
 
 
 def execute_node(n: Node, inputs: list[np.ndarray]) -> np.ndarray:
@@ -248,6 +331,8 @@ def execute_node(n: Node, inputs: list[np.ndarray]) -> np.ndarray:
         return n.value
     if op == "dense":
         x, w = inputs
+        if n.attrs.get("transpose_b"):
+            w = w.swapaxes(-2, -1)
         return (x.astype(np.int64) @ w.astype(np.int64)).astype(n.dtype) if n.dtype.startswith("int") else (x @ w).astype(n.dtype)
     if op == "conv2d":
         x, w = inputs
@@ -290,6 +375,10 @@ def execute_node(n: Node, inputs: list[np.ndarray]) -> np.ndarray:
         return inputs[0].reshape(n.shape)
     if op == "relu":
         return np.maximum(inputs[0], 0)
+    if op == "gelu":
+        return gelu_ref(inputs[0]).astype(n.dtype)
+    if op == "max_pool2d":
+        return max_pool2d_ref(inputs[0], n.attrs["size"], n.attrs["stride"])
     if op == "softmax":
         ax = n.attrs.get("axis", -1)
         x = inputs[0].astype(np.float64)
@@ -297,9 +386,21 @@ def execute_node(n: Node, inputs: list[np.ndarray]) -> np.ndarray:
         return (e / np.sum(e, axis=ax, keepdims=True)).astype(n.dtype)
     if op == "add":
         return inputs[0] + inputs[1]
+    if op == "sub":
+        return inputs[0] - inputs[1]
+    if op == "mul":
+        return inputs[0] * inputs[1]
     if op == "generalized_dense":
         x, w, b = inputs[:3]
-        acc = x.astype(np.int64) @ w.astype(np.int64) if n.attrs.get("quantized") else x @ w
+        if n.attrs.get("transpose_b"):
+            w = w.swapaxes(-2, -1)
+        # integer operands always accumulate wide (the systolic-array
+        # semantics); int32-wrapping on the final cast matches the unfused
+        # dense + bias_add chain exactly (mod-2^32 addition commutes).
+        if n.attrs.get("quantized") or x.dtype.kind in "iu":
+            acc = x.astype(np.int64) @ w.astype(np.int64)
+        else:
+            acc = x @ w
         if b is not None:
             acc = acc + b
         if n.attrs.get("quantized"):
@@ -307,7 +408,12 @@ def execute_node(n: Node, inputs: list[np.ndarray]) -> np.ndarray:
             acc = np.clip(acc, n.attrs["clip_lo"], n.attrs["clip_hi"])
         elif n.attrs.get("activation") == "relu":
             acc = np.maximum(acc, 0)
-        return acc.astype(n.dtype)
+        elif n.attrs.get("activation") == "gelu":
+            acc = gelu_ref(acc)
+        out = acc.astype(n.dtype)
+        if len(inputs) > 3 and inputs[3] is not None:
+            out = out + inputs[3]  # fused residual epilogue
+        return out
     if op == "generalized_conv2d":
         # evaluated through its dense form after im2col by the executor
         raise NotImplementedError("generalized_conv2d executes via backend lowering")

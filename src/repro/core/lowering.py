@@ -1,0 +1,364 @@
+"""Backend lowering: (node, strategy) -> executable callable per target.
+
+Split out of the old ``pipeline.py`` monolith so executor construction is
+testable without the scheduling machinery.  Two paths:
+
+  * **Gemmini-style** (numpy): tensorized tiled loop nest over the
+    registered compute intrinsic, with the fused epilogue (requantize/clip
+    or activation), the optional pooling and residual epilogues the graph
+    optimizer fuses in, and plan-time specialization over constant
+    operands (pre-padded weight panels, bias preloaded as the initial
+    accumulator tile).
+  * **TPU** (Pallas): the schedule lowers to a ``pl.pallas_call`` kernel
+    config; quantized ops take the int8 kernel with fused requant+clip.
+
+Epilogue attribute contract on generalized ops (set by the passes):
+
+  * ``quantized`` + ``requant_scale``/``clip_lo``/``clip_hi`` — fused
+    quantized epilogue;
+  * ``activation`` — "relu" | "gelu" | None (float path);
+  * ``transpose_b`` — the 2-D weight operand arrives transposed (folded
+    layout transpose); the executor reads it as a free view;
+  * ``pool`` — ``{"size", "stride", "conv_shape"}``: max-pool the conv
+    output (applied after the elementwise epilogue, exactly like the
+    unfused graph);
+  * ``residual`` — one extra trailing input added to the epilogued output
+    (fused skip connection; applied last).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from repro.core.accel import AcceleratorDescription
+from repro.core.intrinsics import HardwareIntrinsicGenerator
+from repro.core.ir import Node, gelu_ref, max_pool2d_ref
+from repro.core.mapping import MappingGenerator
+from repro.core.strategy import Strategy
+
+
+def make_accel_executor(
+    desc: AcceleratorDescription,
+    mapping_gen: MappingGenerator,
+    intrinsic_gen: HardwareIntrinsicGenerator,
+    node: Node,
+    strategy: Strategy,
+    *,
+    use_pallas: bool = False,
+) -> Callable:
+    attrs = node.attrs
+    # ONE resolved flag: an explicit node attr wins (legalization sets
+    # quantized=False on float fused ops), otherwise the bound core
+    # compute decides.  The fused requantize/clip epilogue exists only
+    # on generalized (legalized) ops — a raw dense/conv in naive mode
+    # keeps its epilogue as separate graph nodes — and a quantized
+    # generalized op must carry the epilogue parameters.
+    node_flag = attrs.get("quantized")
+    quantized = bool(
+        strategy.compute.quantized if node_flag is None else node_flag
+    )
+    fused_epilogue = quantized and node.op.startswith("generalized")
+    if fused_epilogue:
+        missing = [
+            k
+            for k in ("requant_scale", "clip_lo", "clip_hi")
+            if attrs.get(k) is None
+        ]
+        if missing:
+            source = (
+                "node attrs"
+                if attrs.get("quantized")
+                else f"core compute {strategy.compute.name!r}"
+            )
+            raise ValueError(
+                f"{node.name}: quantized {node.op} (flag from {source}) is "
+                f"missing required epilogue attrs {missing}; legalization "
+                f"sets them when fusing requantize/clip, hand-built "
+                f"generalized ops must provide them"
+            )
+
+    if desc.name.startswith("tpu"):
+        return _make_tpu_executor(
+            desc, mapping_gen, node, strategy, fused_epilogue, use_pallas
+        )
+    return _make_gemmini_executor(
+        desc, mapping_gen, intrinsic_gen, node, strategy, fused_epilogue
+    )
+
+
+def _make_gemmini_executor(
+    desc: AcceleratorDescription,
+    mapping_gen: MappingGenerator,
+    intrinsic_gen: HardwareIntrinsicGenerator,
+    node: Node,
+    strategy: Strategy,
+    fused_epilogue: bool,
+) -> Callable:
+    """Tensorized tiled numpy executor + fused epilogue chain."""
+    attrs = node.attrs
+    intr = desc.compute_intrinsic_for_tag(strategy.compute.tag)
+    intrinsic_gen.tensorize_check(strategy.compute.tag, strategy.schedule)
+    tiled = mapping_gen.to_tiled_executor(strategy.schedule, intr)
+    is_conv = node.op.endswith("conv2d")
+    transpose_b = bool(attrs.get("transpose_b")) and not is_conv
+    stride = attrs.get("stride", 1)
+    padding = attrs.get("padding", 0)
+    out_shape, out_dtype = node.shape, node.dtype
+    activation = attrs.get("activation")
+    pool = attrs.get("pool")
+    # the elementwise epilogue runs over the conv's own output; pooling
+    # then reduces it to the node shape.
+    pre_shape = tuple(pool["conv_shape"]) if pool else out_shape
+
+    def _im2col(x, kh, kw, ci):
+        # registered preprocessing: im2col on the host (non-constant
+        # operand), then the conv is exactly the scheduled GEMM with
+        # HWIO weights flattened to (kh*kw*ci, co) — §3.2.
+        if padding:
+            x = np.pad(
+                x, ((0, 0), (padding, padding), (padding, padding), (0, 0))
+            )
+        n, h, wd, _ = x.shape
+        oh = (h - kh) // stride + 1
+        ow = (wd - kw) // stride + 1
+        cols = np.empty((n * oh * ow, kh * kw * ci), dtype=x.dtype)
+        idx = 0
+        for b_ in range(n):
+            for i in range(oh):
+                for j in range(ow):
+                    patch = x[
+                        b_,
+                        i * stride : i * stride + kh,
+                        j * stride : j * stride + kw,
+                        :,
+                    ]
+                    cols[idx] = patch.reshape(-1)
+                    idx += 1
+        return cols
+
+    if pool:
+        pool_size, pool_stride = pool["size"], pool["stride"]
+
+        def _finish(out):
+            out = out.reshape(pre_shape).astype(out_dtype)
+            return max_pool2d_ref(out, pool_size, pool_stride)
+
+    else:
+
+        def _finish(out):
+            return out.reshape(out_shape).astype(out_dtype)
+
+    if fused_epilogue:
+        requant_scale = attrs["requant_scale"]
+        clip_lo, clip_hi = attrs["clip_lo"], attrs["clip_hi"]
+
+        def _epilogue(acc):
+            # np.rint == np.round(decimals=0) (half-to-even), and
+            # int64 * float scalar promotes to float64 elementwise —
+            # bit-identical to astype(float64)-then-multiply for GEMM
+            # accumulator magnitudes, minus one allocation.
+            out = np.rint(acc * requant_scale)
+            out = out.clip(clip_lo, clip_hi)
+            return _finish(out)
+
+    elif activation == "relu":
+
+        def _epilogue(acc):
+            return _finish(np.maximum(acc, 0))
+
+    elif activation == "gelu":
+
+        def _epilogue(acc):
+            return _finish(gelu_ref(acc))
+
+    else:
+
+        def _epilogue(acc):
+            return _finish(acc)
+
+    def gemmini_exec(x, w, bias=None, residual=None):
+        x = np.asarray(x)
+        w = np.asarray(w)
+        if is_conv:
+            kh, kw, ci, co = w.shape
+            x2 = _im2col(x, kh, kw, ci)
+            w2 = w.reshape(kh * kw * ci, co)
+        else:
+            x2 = x.reshape(-1, x.shape[-1])
+            w2 = w.T if transpose_b else w
+        acc = tiled(x2, w2)
+        if bias is not None:
+            acc = acc + np.asarray(bias).astype(np.int64)
+        out = _epilogue(acc)
+        if residual is not None:
+            out = out + residual
+        return out
+
+    def specialize_consts(consts: dict[int, np.ndarray]):
+        """Plan-time specialization over compile-time-constant inputs
+        (weights, bias): conv weights are flattened, folded layout
+        transposes are materialized once, and the weight panel padded to
+        the schedule's (pk, pn) once, instead of on every call.  When the
+        whole padded GEMM fits a single PE tile — the common case for
+        serving-size layers — the intrinsic consumes the unpadded operands
+        directly (tile limits are maxima), with the constant bias preloaded
+        as the initial accumulator tile, exactly as a weight-stationary
+        array preloads its accumulator.  Bit-identical to ``gemmini_exec``
+        (zero-padding contributes exact zeros to integer accumulation); the
+        per-node interpreter cannot do any of this because it re-reads the
+        graph each run."""
+        if 1 not in consts:
+            return None
+        w = np.asarray(consts[1])
+        if is_conv:
+            kh, kw, ci, co = w.shape
+            w2 = w.reshape(kh * kw * ci, co)
+            conv_dims = (kh, kw, ci)
+        else:
+            w2 = np.ascontiguousarray(w.T) if transpose_b else w
+            conv_dims = None
+        n_out = w2.shape[1]
+        wp = tiled.pad_w(w2)
+        run_prepadded = tiled.prepadded
+        has_const_bias = 2 in consts
+        bias_c = (
+            np.asarray(consts[2]).astype(np.int64) if has_const_bias else None
+        )
+        sched = strategy.schedule
+        pe = sched.pe_tile()
+        single_tile = all(sched.padded(j) == pe[j] for j in ("N", "C", "K"))
+        intr_fn = intr.fn
+        m_stat, k_stat = strategy.workload.N, strategy.workload.C
+        x_dt = np.dtype(node.inputs[0].dtype)
+        acc_shape = (m_stat, n_out)
+
+        # single-call fast path, verified once by a zero-input probe:
+        # the intrinsic must pass the initial accumulator through
+        # unchanged (the same contract the generic k-loop accumulation
+        # relies on) and must not mutate its operands.  Anything
+        # surprising falls back to the padded tile loop.
+        fast_init = None
+        has_bias_operand = len(node.inputs) > 2 and node.inputs[2] is not None
+        if single_tile and (has_const_bias or not has_bias_operand):
+            if has_const_bias:
+                init = np.broadcast_to(bias_c, acc_shape)  # read-only view
+            else:
+                init = np.zeros(acc_shape, dtype=np.int64)
+                # an in-place-accumulating intrinsic would corrupt the
+                # shared init across calls AND slip past a zero-input
+                # probe; read-only makes it raise (and fall back) instead.
+                init.setflags(write=False)
+            try:
+                probe = intr_fn(np.zeros((m_stat, k_stat), x_dt), w2, init)
+                if (
+                    getattr(probe, "shape", None) == acc_shape
+                    and np.array_equal(probe, init)
+                    and (not has_const_bias or np.array_equal(init[0], bias_c))
+                ):
+                    fast_init = init
+            except Exception:
+                fast_init = None
+
+        if fused_epilogue:
+            # preallocated requantize scratch (shapes are static per
+            # node); the arena value is always the fresh array the final
+            # astype produces, so scratch reuse can never alias results.
+            fbuf = np.empty(acc_shape, dtype=np.float64)
+            clip_lo_, clip_hi_ = attrs["clip_lo"], attrs["clip_hi"]
+            scale_ = attrs["requant_scale"]
+
+            def _epilogue_planned(acc):
+                if acc.shape != acc_shape:
+                    return _epilogue(acc)
+                np.multiply(acc, scale_, out=fbuf)
+                np.rint(fbuf, out=fbuf)
+                fbuf.clip(clip_lo_, clip_hi_, out=fbuf)
+                return _finish(fbuf)
+
+        else:
+            _epilogue_planned = _epilogue
+
+        def gemmini_exec_planned(x, w=None, bias=None, residual=None):
+            x = np.asarray(x)
+            if conv_dims is not None:
+                x2 = _im2col(x, *conv_dims)
+            else:
+                x2 = x.reshape(-1, x.shape[-1])
+            if (
+                fast_init is not None
+                and x2.shape == (m_stat, k_stat)
+                and x2.dtype == x_dt
+            ):
+                out = _epilogue_planned(intr_fn(x2, w2, fast_init))
+            else:
+                acc = run_prepadded(x2, wp, n_out)
+                if has_const_bias:
+                    acc = acc + bias_c
+                elif bias is not None:
+                    acc = acc + np.asarray(bias).astype(np.int64)
+                out = _epilogue_planned(acc)
+            if residual is not None:
+                out = out + residual
+            return out
+
+        return gemmini_exec_planned
+
+    gemmini_exec.specialize_consts = specialize_consts
+    return gemmini_exec
+
+
+def _make_tpu_executor(
+    desc: AcceleratorDescription,
+    mapping_gen: MappingGenerator,
+    node: Node,
+    strategy: Strategy,
+    quantized: bool,
+    use_pallas: bool,
+) -> Callable:
+    """``quantized`` is the resolved fused-epilogue flag from
+    ``make_accel_executor``: the int8 kernel path with fused
+    requantize/clip."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    attrs = node.attrs
+    if attrs.get("pool"):
+        raise NotImplementedError(
+            "fused pooling epilogues are not lowered on the TPU path "
+            "(conv2d has no Pallas kernel lowering)"
+        )
+    transpose_b = bool(attrs.get("transpose_b"))
+    epilogue = {
+        "requant_scale": attrs.get("requant_scale"),
+        "clip_lo": attrs.get("clip_lo"),
+        "clip_hi": attrs.get("clip_hi"),
+        "activation": attrs.get("activation"),
+    }
+    cfg = mapping_gen.to_kernel_config(
+        strategy.schedule,
+        acc_dtype="int32" if quantized else "float32",
+        out_dtype=node.dtype if node.dtype != "float64" else "float32",
+        epilogue=epilogue,
+        interpret=True,
+        has_bias=len(node.inputs) > 2 and node.inputs[2] is not None,
+    )
+
+    def tpu_exec(x, w, bias=None, residual=None):
+        x_j = jnp.asarray(x)
+        w_j = jnp.asarray(w)
+        if transpose_b:
+            w_j = w_j.T
+        b_j = jnp.asarray(bias) if bias is not None else None
+        if quantized:
+            out = kops.qmatmul(x_j, w_j, b_j, cfg, use_pallas=use_pallas)
+        else:
+            out = kops.matmul(x_j, w_j, cfg, b_j, use_pallas=use_pallas)
+        out = np.asarray(out).reshape(node.shape)
+        if residual is not None:
+            out = out + residual
+        return out
+
+    return tpu_exec

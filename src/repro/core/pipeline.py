@@ -1,321 +1,73 @@
-"""End-to-end compilation pipeline: graph -> passes -> strategies ->
-mapped executables + cycle model (paper Fig. 1).
+"""End-to-end compilation flow: staged passes -> strategies -> mapped
+executables + cycle model (paper Fig. 1).
+
+The flow is now explicitly staged (each stage lives in its own module):
+
+  1. **frontend lowering** — ``passes.passes_for_mode`` builds the
+     per-mode pass list (legalization rule tables, target-contributed
+     patterns, residual/pool fusion, constant folding, CSE/DCE,
+     partitioning) and the ``PassManager`` runs it with per-pass
+     instrumentation (``repro.core.passes`` / ``pass_manager`` /
+     ``rewrite``);
+  2. **strategy & schedule selection** — ``CompilerBackend`` resolves an
+     extended-CoSA (or baseline-heuristic) schedule per accelerator node,
+     through the persistent schedule cache (this module);
+  3. **backend lowering** — ``lowering.make_accel_executor`` turns each
+     (node, strategy) into an executable kernel (``repro.core.lowering``);
+  4. **plan building** — the compiled graph lowers to a slot-indexed
+     ``ExecutionPlan`` over a reusable buffer arena
+     (``repro.core.executor``).
 
 Three modes reproduce the paper's evaluation matrix (§4, Table 2):
 
-  * ``proposed``    — legalization (fused generalized ops) + constant
-                      folding + extended-CoSA scheduling + fused loop issue.
+  * ``proposed``    — full optimization pipeline + extended-CoSA
+                      scheduling + fused loop issue.
   * ``c_toolchain`` — same frontend, but schedules come from the Gemmini
                       ``tiled_matmul_auto``-style heuristic (the manually
                       implemented C-function toolchain).
-  * ``naive``       — stock BYOC/UMA: no legalization (QNN epilogue ops
-                      stay as host ops), no constant folding (weight
-                      transposition/quantization run per inference), naive
-                      schedules, per-tile instruction issue.
+  * ``naive``       — stock BYOC/UMA: partitioning only (QNN epilogue ops
+                      stay as host ops, weight transposition/quantization
+                      run per inference), naive schedules, per-tile
+                      instruction issue.
 
-The compiled module both *executes* (numpy/jnp reference semantics; Pallas
-interpret-mode kernels for the TPU description) and *simulates* (cycle
-model) the graph, so functional tests and the Table 2 benchmark share one
-artifact.
+This module keeps re-exporting the executor/plan names it used to define
+(``CompiledModule``, ``ExecutionPlan``, ``build_plan``, ...) so existing
+imports stay valid.
 """
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Any, Callable
+from dataclasses import dataclass, replace
 
-import numpy as np
-
-from repro.core.accel import AcceleratorDescription
-from repro.core.baselines import c_toolchain_schedule, naive_schedule
+from repro.core.executor import (  # noqa: F401  (re-exported surface)
+    FREE_VIEW_OPS,
+    CompiledModule,
+    CompiledOp,
+    ExecutionPlan,
+    PlanStep,
+    build_plan,
+    compile_host_op,
+)
 from repro.core.intrinsics import HardwareIntrinsicGenerator
-from repro.core.ir import Graph, Node, execute_node
+from repro.core.ir import Graph, Node
+from repro.core.lowering import make_accel_executor
 from repro.core.mapping import MappingGenerator
-from repro.core.passes import run_frontend
+from repro.core.pass_manager import PassContext, PassManager
+from repro.core.passes import passes_for_mode
 from repro.core.schedule_cache import ScheduleCache
 from repro.core.scheduler import ExtendedCosaScheduler, ScheduleResult
 from repro.core.simulator import simulate
-from repro.core.strategy import Strategy, StrategyGenerator, dtype_bytes, workload_from_node
+from repro.core.strategy import StrategyGenerator, workload_from_node
+from repro.core.baselines import c_toolchain_schedule, naive_schedule
 
 MODES = ("proposed", "c_toolchain", "naive")
-
-# Zero-copy view ops: free in the cycle model (no data movement, the host
-# just reinterprets the buffer).  One canonical set so the cycle model and
-# the layout-op class below can never disagree about what a view is.
-FREE_VIEW_OPS = {"reshape", "flatten"}
-
-# host-op cost classes for the cycle model
-_LAYOUT_OPS = {"transpose", "im2col", "quantize"} | FREE_VIEW_OPS
-_EPILOGUE_OPS = {
-    "requantize",
-    "clip",
-    "bias_add",
-    "dequantize",
-    "relu",
-    "add",
-    "softmax",
-}
-
-
-@dataclass
-class CompiledOp:
-    node: Node
-    strategy: Strategy
-    executor: Callable[..., np.ndarray]
-
-
-def compile_host_op(n: Node) -> Callable[..., np.ndarray]:
-    """Specialize one host op into a direct closure: attrs/dtype lookups and
-    the ``execute_node`` if-chain dispatch happen here, once, at plan-build
-    time instead of on every call.  Semantics are bit-identical to
-    ``execute_node`` (the equivalence tests hold both paths to that)."""
-    op, attrs, dtype = n.op, n.attrs, n.dtype
-    if op == "relu":
-        return lambda x: np.maximum(x, 0)
-    if op == "add":
-        return lambda a, b: a + b
-    if op == "clip":
-        lo, hi = attrs["lo"], attrs["hi"]
-        return lambda x: np.clip(x, lo, hi).astype(dtype)
-    if op == "requantize":
-        scale = attrs["scale"]
-        if dtype.startswith(("int", "uint")):
-            info = np.iinfo(dtype)
-            lo, hi = info.min, info.max
-            return lambda x: np.clip(
-                np.round(x.astype(np.float64) * scale), lo, hi
-            ).astype(dtype)
-        return lambda x: np.round(x.astype(np.float64) * scale).astype(dtype)
-    if op == "quantize":
-        scale = attrs["scale"]
-        return lambda x: np.clip(np.round(x / scale), -128, 127).astype(dtype)
-    if op == "dequantize":
-        scale = attrs["scale"]
-        return lambda x: x.astype(np.float32) * scale
-    if op == "transpose":
-        perm = attrs["perm"]
-        return lambda x: np.transpose(x, perm)
-    if op in FREE_VIEW_OPS:
-        shape = attrs["shape"] if op == "reshape" else n.shape
-        return lambda x: x.reshape(shape)
-    if op == "bias_add":
-        if dtype.startswith("int"):
-            return lambda x, b: (
-                x.astype(np.int64) + b.astype(np.int64)
-            ).astype(dtype)
-        return lambda x, b: x + b
-    if op == "softmax":
-        ax = attrs.get("axis", -1)
-
-        def _softmax(x):
-            xf = x.astype(np.float64)
-            e = np.exp(xf - np.max(xf, axis=ax, keepdims=True))
-            return (e / np.sum(e, axis=ax, keepdims=True)).astype(dtype)
-
-        return _softmax
-    # anything else (dense/conv left on the host, exotic ops): fall back to
-    # the reference interpreter for this node only.
-    return lambda *ins, _n=n: execute_node(_n, list(ins))
-
-
-# arena slot 0 permanently holds None so optional (absent) operands can be
-# addressed like any other input slot.
-_NONE_SLOT = 0
-
-
-@dataclass
-class PlanStep:
-    """One computed node: write ``fn(*arena[arg_slots])`` into ``slot``."""
-
-    slot: int
-    fn: Callable[..., np.ndarray]
-    arg_slots: tuple[int, ...]
-    op: str
-    name: str
-
-
-@dataclass
-class ExecutionPlan:
-    """Compile-time execution plan: topological op order, input/output slot
-    indices, and pre-resolved per-step callables over a flat buffer arena.
-
-    ``CompiledModule.run`` walks ``steps`` as a flat loop — no graph
-    traversal, no dict-of-Node hashing, no per-call op dispatch.  Constants
-    are materialized into the arena once, when it is created, and survive
-    across calls (the arena is reused by ``run_many``)."""
-
-    n_slots: int
-    input_slots: tuple[tuple[str, int], ...]  # (feed name, arena slot)
-    const_slots: tuple[tuple[int, np.ndarray], ...]
-    steps: tuple[PlanStep, ...]
-    output_slots: tuple[int, ...]
-
-    def __post_init__(self):
-        # flat (slot, fn, arg_slots) triples: the hot loop avoids dataclass
-        # attribute lookups entirely.
-        self._fast_steps = tuple((s.slot, s.fn, s.arg_slots) for s in self.steps)
-
-    def new_arena(self) -> list:
-        arena: list = [None] * self.n_slots
-        for slot, value in self.const_slots:
-            arena[slot] = value
-        return arena
-
-    def execute(self, feeds: dict[str, np.ndarray], arena: list) -> list[np.ndarray]:
-        for name, slot in self.input_slots:
-            try:
-                arena[slot] = np.asarray(feeds[name])
-            except KeyError:
-                raise KeyError(f"missing feed for input {name!r}") from None
-        for slot, fn, arg_slots in self._fast_steps:
-            arena[slot] = fn(*[arena[i] for i in arg_slots])
-        return [arena[i] for i in self.output_slots]
-
-
-def build_plan(graph: Graph, ops: dict[Node, CompiledOp]) -> ExecutionPlan:
-    """Lower a compiled graph to its execution plan (one toposort, ever)."""
-    order = graph.toposort()
-    slot_of: dict[Node, int] = {n: i + 1 for i, n in enumerate(order)}
-    input_slots: list[tuple[str, int]] = []
-    const_slots: list[tuple[int, np.ndarray]] = []
-    steps: list[PlanStep] = []
-    for n in order:
-        slot = slot_of[n]
-        if n.op == "input":
-            input_slots.append((n.name, slot))
-        elif n.op == "const":
-            const_slots.append((slot, n.value))
-        else:
-            arg_slots = tuple(
-                _NONE_SLOT if i is None else slot_of[i] for i in n.inputs
-            )
-            if n in ops:
-                fn = ops[n].executor
-                # accelerator executors may offer plan-time specialization
-                # over inputs that are compile-time constants (pre-padded
-                # weight panels, pre-widened bias).
-                specialize = getattr(fn, "specialize_consts", None)
-                if specialize is not None:
-                    consts = {
-                        i: inp.value
-                        for i, inp in enumerate(n.inputs)
-                        if inp is not None and inp.is_const()
-                    }
-                    specialized = specialize(consts) if consts else None
-                    if specialized is not None:
-                        fn = specialized
-            else:
-                fn = compile_host_op(n)
-            steps.append(PlanStep(slot, fn, arg_slots, n.op, n.name))
-    return ExecutionPlan(
-        n_slots=len(order) + 1,
-        input_slots=tuple(input_slots),
-        const_slots=tuple(const_slots),
-        steps=tuple(steps),
-        output_slots=tuple(slot_of[o] for o in graph.outputs),
-    )
-
-
-@dataclass
-class CompiledModule:
-    graph: Graph
-    desc: AcceleratorDescription
-    mode: str
-    ops: dict[Node, CompiledOp] = field(default_factory=dict)
-    # built once by compile(); None only for hand-assembled modules.
-    plan: ExecutionPlan | None = None
-    _arena: list | None = field(default=None, repr=False)
-
-    # -- execution ---------------------------------------------------------
-    def finalize(self) -> "ExecutionPlan":
-        """Build (or return) the execution plan and its reusable arena."""
-        if self.plan is None:
-            self.plan = build_plan(self.graph, self.ops)
-        if self._arena is None:
-            self._arena = self.plan.new_arena()
-        return self.plan
-
-    def run(
-        self, feeds: dict[str, np.ndarray], *, use_plan: bool = True
-    ) -> list[np.ndarray]:
-        """Execute the module.  ``use_plan=False`` runs the legacy per-node
-        interpreter (kept for planned-vs-interpreted equivalence testing and
-        as the baseline of ``benchmarks/table2_bench.py``)."""
-        if not use_plan:
-            return self._run_interpreted(feeds)
-        plan = self.finalize()
-        return plan.execute(feeds, self._arena)
-
-    def run_many(
-        self, feeds_list: list[dict[str, np.ndarray]], *, use_plan: bool = True
-    ) -> list[list[np.ndarray]]:
-        """Repeated invocation over a list of feeds (serving-style traffic);
-        the plan and buffer arena are built once and reused for every call.
-        Not thread-safe: concurrent callers must hold their own module."""
-        if not use_plan:
-            return [self._run_interpreted(f) for f in feeds_list]
-        plan = self.finalize()
-        arena = self._arena
-        execute = plan.execute
-        return [execute(feeds, arena) for feeds in feeds_list]
-
-    def _run_interpreted(self, feeds: dict[str, np.ndarray]) -> list[np.ndarray]:
-        """The pre-plan per-node interpreter: re-toposorts and re-dispatches
-        on every call."""
-        vals: dict[Node, np.ndarray] = {}
-        for n in self.graph.toposort():
-            if n.op == "input":
-                vals[n] = np.asarray(feeds[n.name])
-            else:
-                ins = [vals[i] if i is not None else None for i in n.inputs]
-                if n in self.ops:
-                    vals[n] = self.ops[n].executor(*ins)
-                else:
-                    vals[n] = execute_node(n, ins)
-        return [vals[o] for o in self.graph.outputs]
-
-    # -- cycle model ---------------------------------------------------------
-    def modeled_cycles(self) -> dict[str, float]:
-        """Total modeled cycles: accelerator ops via the schedule simulator,
-        residual host ops (unfolded preprocessing / unfused epilogues in
-        naive mode) via per-byte host costs."""
-        arch = self.desc.arch
-        accel = 0.0
-        host = 0.0
-        fused = self.mode != "naive"
-        for n in self.graph.toposort():
-            if n in self.ops:
-                rep = simulate(
-                    self.ops[n].strategy.schedule,
-                    arch,
-                    folded_preprocessing=True,  # graph structure carries it
-                    fused_loop_instructions=fused,
-                )
-                accel += rep.total_cycles
-            elif n.op in _LAYOUT_OPS and n.op not in FREE_VIEW_OPS:
-                nbytes = math.prod(n.shape) * dtype_bytes(n.dtype)
-                host += nbytes * arch.host_preproc_cycles_per_byte
-            elif n.op in _EPILOGUE_OPS:
-                in_bytes = (
-                    math.prod(n.inputs[0].shape) * dtype_bytes(n.inputs[0].dtype)
-                    if n.inputs
-                    else 0
-                )
-                host += in_bytes * arch.host_epilogue_cycles_per_byte
-        return {"accel": accel, "host": host, "total": accel + host}
-
-    def schedules(self) -> dict[str, Any]:
-        return {
-            n.name: op.strategy.schedule.to_dict() for n, op in self.ops.items()
-        }
 
 
 @dataclass
 class CompilerBackend:
     """The generated TVM-style backend (output of the configurators)."""
 
-    desc: AcceleratorDescription
+    desc: object  # AcceleratorDescription
     scheduler: ExtendedCosaScheduler
     strategy_gen: StrategyGenerator
     intrinsic_gen: HardwareIntrinsicGenerator
@@ -329,6 +81,7 @@ class CompilerBackend:
     _desc_fingerprint: str | None = None
     _solver_id: str | None = None
 
+    # -- stage 2: strategy / schedule selection -----------------------------
     def _cache_key(self, wl, mode: str) -> str:
         if self._desc_fingerprint is None:
             self._desc_fingerprint = self.desc.fingerprint()
@@ -369,275 +122,52 @@ class CompilerBackend:
         rep = simulate(sched, self.desc.arch)
         return ScheduleResult(best=sched, report=rep, n_candidates=1, n_infeasible=0)
 
-    def _make_executor(self, node: Node, strategy: Strategy) -> Callable:
-        attrs = node.attrs
-        # ONE resolved flag: an explicit node attr wins (legalization sets
-        # quantized=False on float fused ops), otherwise the bound core
-        # compute decides.  The fused requantize/clip epilogue exists only
-        # on generalized (legalized) ops — a raw dense/conv in naive mode
-        # keeps its epilogue as separate graph nodes — and a quantized
-        # generalized op must carry the epilogue parameters.
-        node_flag = attrs.get("quantized")
-        quantized = bool(
-            strategy.compute.quantized if node_flag is None else node_flag
-        )
-        fused_epilogue = quantized and node.op.startswith("generalized")
-        if fused_epilogue:
-            missing = [
-                k
-                for k in ("requant_scale", "clip_lo", "clip_hi")
-                if attrs.get(k) is None
-            ]
-            if missing:
-                source = (
-                    "node attrs"
-                    if attrs.get("quantized")
-                    else f"core compute {strategy.compute.name!r}"
-                )
-                raise ValueError(
-                    f"{node.name}: quantized {node.op} (flag from {source}) is "
-                    f"missing required epilogue attrs {missing}; legalization "
-                    f"sets them when fusing requantize/clip, hand-built "
-                    f"generalized ops must provide them"
-                )
-
-        if self.desc.name.startswith("tpu"):
-            return self._make_tpu_executor(node, strategy, fused_epilogue)
-
-        # Gemmini path: tensorized tiled numpy executor + epilogue
-        intr = self.desc.compute_intrinsic_for_tag(strategy.compute.tag)
-        self.intrinsic_gen.tensorize_check(strategy.compute.tag, strategy.schedule)
-        tiled = self.mapping_gen.to_tiled_executor(strategy.schedule, intr)
-        is_conv = node.op.endswith("conv2d")
-        stride = attrs.get("stride", 1)
-        padding = attrs.get("padding", 0)
-        out_shape, out_dtype = node.shape, node.dtype
-        activation = attrs.get("activation")
-
-        def _im2col(x, kh, kw, ci):
-            # registered preprocessing: im2col on the host (non-constant
-            # operand), then the conv is exactly the scheduled GEMM with
-            # HWIO weights flattened to (kh*kw*ci, co) — §3.2.
-            if padding:
-                x = np.pad(
-                    x, ((0, 0), (padding, padding), (padding, padding), (0, 0))
-                )
-            n, h, wd, _ = x.shape
-            oh = (h - kh) // stride + 1
-            ow = (wd - kw) // stride + 1
-            cols = np.empty((n * oh * ow, kh * kw * ci), dtype=x.dtype)
-            idx = 0
-            for b_ in range(n):
-                for i in range(oh):
-                    for j in range(ow):
-                        patch = x[
-                            b_,
-                            i * stride : i * stride + kh,
-                            j * stride : j * stride + kw,
-                            :,
-                        ]
-                        cols[idx] = patch.reshape(-1)
-                        idx += 1
-            return cols
-
-        if fused_epilogue:
-            requant_scale = attrs["requant_scale"]
-            clip_lo, clip_hi = attrs["clip_lo"], attrs["clip_hi"]
-
-            def _epilogue(acc):
-                # np.rint == np.round(decimals=0) (half-to-even), and
-                # int64 * float scalar promotes to float64 elementwise —
-                # bit-identical to astype(float64)-then-multiply for GEMM
-                # accumulator magnitudes, minus one allocation.
-                out = np.rint(acc * requant_scale)
-                out = out.clip(clip_lo, clip_hi)
-                return out.reshape(out_shape).astype(out_dtype)
-
-        elif activation == "relu":
-
-            def _epilogue(acc):
-                return np.maximum(acc, 0).reshape(out_shape).astype(out_dtype)
-
-        else:
-
-            def _epilogue(acc):
-                return acc.reshape(out_shape).astype(out_dtype)
-
-        def gemmini_exec(x, w, bias=None):
-            x = np.asarray(x)
-            w = np.asarray(w)
-            if is_conv:
-                kh, kw, ci, co = w.shape
-                x2 = _im2col(x, kh, kw, ci)
-                w2 = w.reshape(kh * kw * ci, co)
-            else:
-                x2 = x.reshape(-1, x.shape[-1])
-                w2 = w
-            acc = tiled(x2, w2)
-            if bias is not None:
-                acc = acc + np.asarray(bias).astype(np.int64)
-            return _epilogue(acc)
-
-        def specialize_consts(consts: dict[int, np.ndarray]):
-            """Plan-time specialization over compile-time-constant inputs
-            (weights, bias): conv weights are flattened and the weight panel
-            padded to the schedule's (pk, pn) once, instead of on every
-            call.  When the whole padded GEMM fits a single PE tile — the
-            common case for serving-size layers — the intrinsic consumes
-            the unpadded operands directly (tile limits are maxima), with
-            the constant bias preloaded as the initial accumulator tile,
-            exactly as a weight-stationary array preloads its accumulator.
-            Bit-identical to ``gemmini_exec`` (zero-padding contributes
-            exact zeros to integer accumulation); the per-node interpreter
-            cannot do any of this because it re-reads the graph each run."""
-            if 1 not in consts:
-                return None
-            w = np.asarray(consts[1])
-            if is_conv:
-                kh, kw, ci, co = w.shape
-                w2 = w.reshape(kh * kw * ci, co)
-                conv_dims = (kh, kw, ci)
-            else:
-                w2 = w
-                conv_dims = None
-            n_out = w2.shape[1]
-            wp = tiled.pad_w(w2)
-            run_prepadded = tiled.prepadded
-            has_const_bias = 2 in consts
-            bias_c = (
-                np.asarray(consts[2]).astype(np.int64) if has_const_bias else None
-            )
-            sched = strategy.schedule
-            pe = sched.pe_tile()
-            single_tile = all(sched.padded(j) == pe[j] for j in ("N", "C", "K"))
-            intr_fn = intr.fn
-            m_stat, k_stat = strategy.workload.N, strategy.workload.C
-            x_dt = np.dtype(node.inputs[0].dtype)
-            acc_shape = (m_stat, n_out)
-
-            # single-call fast path, verified once by a zero-input probe:
-            # the intrinsic must pass the initial accumulator through
-            # unchanged (the same contract the generic k-loop accumulation
-            # relies on) and must not mutate its operands.  Anything
-            # surprising falls back to the padded tile loop.
-            fast_init = None
-            n_bias_inputs = len(node.inputs) > 2
-            if single_tile and (has_const_bias or not n_bias_inputs):
-                if has_const_bias:
-                    init = np.broadcast_to(bias_c, acc_shape)  # read-only view
-                else:
-                    init = np.zeros(acc_shape, dtype=np.int64)
-                    # an in-place-accumulating intrinsic would corrupt the
-                    # shared init across calls AND slip past a zero-input
-                    # probe; read-only makes it raise (and fall back) instead.
-                    init.setflags(write=False)
-                try:
-                    probe = intr_fn(np.zeros((m_stat, k_stat), x_dt), w2, init)
-                    if (
-                        getattr(probe, "shape", None) == acc_shape
-                        and np.array_equal(probe, init)
-                        and (not has_const_bias or np.array_equal(init[0], bias_c))
-                    ):
-                        fast_init = init
-                except Exception:
-                    fast_init = None
-
-            if fused_epilogue:
-                # preallocated requantize scratch (shapes are static per
-                # node); the arena value is always the fresh array the final
-                # astype produces, so scratch reuse can never alias results.
-                fbuf = np.empty(acc_shape, dtype=np.float64)
-                clip_lo_, clip_hi_ = attrs["clip_lo"], attrs["clip_hi"]
-                scale_ = attrs["requant_scale"]
-
-                def _epilogue_planned(acc):
-                    if acc.shape != acc_shape:
-                        return _epilogue(acc)
-                    np.multiply(acc, scale_, out=fbuf)
-                    np.rint(fbuf, out=fbuf)
-                    fbuf.clip(clip_lo_, clip_hi_, out=fbuf)
-                    return fbuf.reshape(out_shape).astype(out_dtype)
-
-            else:
-                _epilogue_planned = _epilogue
-
-            def gemmini_exec_planned(x, w=None, bias=None):
-                x = np.asarray(x)
-                if conv_dims is not None:
-                    x2 = _im2col(x, *conv_dims)
-                else:
-                    x2 = x.reshape(-1, x.shape[-1])
-                if (
-                    fast_init is not None
-                    and x2.shape == (m_stat, k_stat)
-                    and x2.dtype == x_dt
-                ):
-                    return _epilogue_planned(intr_fn(x2, w2, fast_init))
-                acc = run_prepadded(x2, wp, n_out)
-                if has_const_bias:
-                    acc = acc + bias_c
-                elif bias is not None:
-                    acc = acc + np.asarray(bias).astype(np.int64)
-                return _epilogue_planned(acc)
-
-            return gemmini_exec_planned
-        gemmini_exec.specialize_consts = specialize_consts
-        return gemmini_exec
-
-    def _make_tpu_executor(self, node: Node, strategy: Strategy, quantized: bool):
-        """``quantized`` is the resolved fused-epilogue flag from
-        ``_make_executor``: the int8 kernel path with fused requantize/clip."""
-        import jax.numpy as jnp
-
-        from repro.kernels import ops as kops
-
-        attrs = node.attrs
-        epilogue = {
-            "requant_scale": attrs.get("requant_scale"),
-            "clip_lo": attrs.get("clip_lo"),
-            "clip_hi": attrs.get("clip_hi"),
-            "activation": attrs.get("activation"),
-        }
-        cfg = self.mapping_gen.to_kernel_config(
-            strategy.schedule,
-            acc_dtype="int32" if quantized else "float32",
-            out_dtype=node.dtype if node.dtype != "float64" else "float32",
-            epilogue=epilogue,
-            interpret=True,
-            has_bias=len(node.inputs) > 2 and node.inputs[2] is not None,
-        )
-        use_pallas = self.use_pallas
-
-        def tpu_exec(x, w, bias=None):
-            x_j = jnp.asarray(x)
-            w_j = jnp.asarray(w)
-            b_j = jnp.asarray(bias) if bias is not None else None
-            if quantized:
-                out = kops.qmatmul(x_j, w_j, b_j, cfg, use_pallas=use_pallas)
-            else:
-                out = kops.matmul(x_j, w_j, cfg, b_j, use_pallas=use_pallas)
-            return np.asarray(out).reshape(node.shape)
-
-        return tpu_exec
-
     # -- the public entry point ---------------------------------------------
-    def compile(self, graph: Graph, mode: str = "proposed") -> CompiledModule:
+    def compile(
+        self,
+        graph: Graph,
+        mode: str = "proposed",
+        *,
+        passes: list | None = None,
+        pass_context: PassContext | None = None,
+    ) -> CompiledModule:
+        """Compile a graph: run the mode's pass pipeline, schedule every
+        accelerator node, lower executors, and build the execution plan.
+
+        ``passes`` overrides the per-mode pipeline with an explicit pass
+        list (testing / experimentation); ``pass_context`` overrides the
+        trace/dump instrumentation context.
+        """
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}")
-        graph = run_frontend(
-            graph,
-            self.desc,
-            fold=(mode != "naive"),
-            do_legalize=(mode != "naive"),
+        pm = PassManager(
+            passes_for_mode(self.desc, mode) if passes is None else passes
         )
-        module = CompiledModule(graph=graph, desc=self.desc, mode=mode)
+        # never mutate a caller-supplied context: it may be shared across
+        # backends or concurrent compiles
+        ctx = replace(
+            pass_context or PassContext(), desc=self.desc, mode=mode
+        )
+        report = pm.run(graph, ctx)
+        module = CompiledModule(
+            graph=graph, desc=self.desc, mode=mode, pass_report=report
+        )
         for n in graph.toposort():
             if n.target != "accel":
                 continue
             sr = self._schedule_for(n, mode)
             strat = self.strategy_gen.generate(n, sr)
             module.ops[n] = CompiledOp(
-                node=n, strategy=strat, executor=self._make_executor(n, strat)
+                node=n,
+                strategy=strat,
+                executor=make_accel_executor(
+                    self.desc,
+                    self.mapping_gen,
+                    self.intrinsic_gen,
+                    n,
+                    strat,
+                    use_pallas=self.use_pallas,
+                ),
             )
         if self.schedule_cache is not None:
             self.schedule_cache.flush()

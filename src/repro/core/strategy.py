@@ -43,7 +43,9 @@ def workload_from_node(node: Node) -> GemmWorkload:
     if base == "dense":
         n_dim = math.prod(x.shape[:-1])
         c_dim = x.shape[-1]
-        k_dim = w.shape[-1]
+        # a folded layout transpose (transpose_b) means the 2-D weight
+        # operand arrives as (K, C); the effective GEMM is unchanged.
+        k_dim = w.shape[-2] if node.attrs.get("transpose_b") else w.shape[-1]
     elif base == "conv2d":
         stride = node.attrs.get("stride", 1)
         padding = node.attrs.get("padding", 0)

@@ -91,8 +91,11 @@ def mlp_graph(layers=TOYCAR_LAYERS, seed: int = 0, name: str = "mlp") -> ir.Grap
 
 
 def qcnn_graph(seed: int = 0) -> ir.Graph:
-    """int8 CNN: conv(3x3, 8->16) -> conv(3x3, 16->16) -> flatten ->
-    dense(1024->32) -> dense(32->10); quantized op chains throughout."""
+    """int8 CNN: conv(3x3, 8->16) -> max_pool(2x2) -> conv(3x3, 16->16) ->
+    flatten -> dense(144->32) -> dense(32->10); quantized op chains
+    throughout.  The pool rides directly on the first conv's quantized
+    chain, so the ``fuse_conv_pool`` pass folds it into the generalized
+    conv's epilogue (the naive BYOC mode pays for it on the host)."""
     rng = np.random.default_rng(seed)
     x = ir.input_((1, 12, 12, 8), "int8", name="x")
     h = _qconv(
@@ -100,16 +103,17 @@ def qcnn_graph(seed: int = 0) -> ir.Graph:
         rng.integers(-8, 8, (3, 3, 8, 16)).astype(np.int8),
         rng.integers(-50, 50, (16,)).astype(np.int32),
     )
+    h = ir.max_pool2d(h, size=2, stride=2)  # (1, 5, 5, 16)
     h = _qconv(
         h,
         rng.integers(-8, 8, (3, 3, 16, 16)).astype(np.int8),
         rng.integers(-50, 50, (16,)).astype(np.int32),
         rq_scale=0.04,
     )
-    h = ir.flatten(h)  # (1, 8*8*16) zero-copy view
+    h = ir.flatten(h)  # (1, 3*3*16) zero-copy view
     h = _qdense(
         h,
-        (rng.normal(size=(32, 1024)) * 0.02).astype(np.float32),
+        (rng.normal(size=(32, 144)) * 0.02).astype(np.float32),
         rng.integers(-50, 50, (32,)).astype(np.int32),
         w_scale=0.02,
         rq_scale=0.1,
@@ -175,7 +179,7 @@ ZOO: dict[str, ZooModel] = {
     for m in (
         ZooModel(
             name="qcnn",
-            description="int8 conv+conv+dense CNN (conv via im2col GEMM)",
+            description="int8 conv+pool+conv+dense CNN (conv via im2col GEMM)",
             build=qcnn_graph,
             input_name="x",
             input_shape=(1, 12, 12, 8),

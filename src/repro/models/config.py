@@ -12,7 +12,7 @@ pattern repeats (stacked params) so HLO stays compact for 88-layer models.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Literal
 
 BlockKind = Literal["attn", "mamba", "mlstm", "slstm"]

@@ -48,8 +48,8 @@ def test_planned_matches_legacy_zoo(model_name, acc, mode):
     feeds = model.feeds(seed=3)
     planned = mod.run(feeds)
     legacy = mod.run(feeds, use_plan=False)
-    for p, l in zip(planned, legacy):
-        assert p.dtype == l.dtype and np.array_equal(p, l)
+    for p, leg in zip(planned, legacy):
+        assert p.dtype == leg.dtype and np.array_equal(p, leg)
     if acc in NUMPY_EXACT:
         ref = ir.execute_graph(model.build(), feeds)
         for p, r in zip(planned, ref):
@@ -66,8 +66,8 @@ def test_planned_matches_legacy_tpu_pallas_interpret(mode):
     feeds = model.feeds(seed=5)
     planned = mod.run(feeds)
     legacy = mod.run(feeds, use_plan=False)
-    for p, l in zip(planned, legacy):
-        assert np.array_equal(np.asarray(p), np.asarray(l))
+    for p, leg in zip(planned, legacy):
+        assert np.array_equal(np.asarray(p), np.asarray(leg))
 
 
 # -- plan structure ------------------------------------------------------------
@@ -110,8 +110,8 @@ def test_run_many_reuses_arena_and_results_stay_independent():
     for out, snap in zip(outs, snapshots):
         assert np.array_equal(out[0], snap)
     legacy = mod.run_many(feeds, use_plan=False)
-    for p, l in zip(outs, legacy):
-        assert np.array_equal(p[0], l[0])
+    for p, leg in zip(outs, legacy):
+        assert np.array_equal(p[0], leg[0])
 
 
 def test_run_missing_feed_raises_keyerror():

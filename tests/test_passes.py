@@ -5,7 +5,7 @@ import numpy as np
 
 from repro.core import ir
 from repro.core.descriptions import make_gemmini_description
-from repro.core.passes import fold_constants, legalize, partition, run_frontend
+from repro.core.passes import fold_constants, legalize, run_frontend
 
 
 def _qdense_graph():

@@ -132,6 +132,6 @@ def test_trainer_survives_induced_fault(tmp_path):
         return real_step(state, batch)
 
     trainer.train_step = flaky_step
-    out = trainer.run(state)
+    trainer.run(state)
     assert fails["n"] == 1  # fault happened and was recovered
     assert latest_step(trainer.cfg.checkpoint_dir) == 8

@@ -1,12 +1,13 @@
-"""Schedule-cache benchmark: cold vs warm compile through ``repro.integrate``.
+"""Schedule-cache benchmark: cold vs warm compile through ``repro.compile``.
 
 Measures the wall-clock cost of compiling a quantized conv+dense graph on
-the ``edge_npu`` description three ways:
+the ``edge_npu`` target three ways:
 
   * cold  — fresh backend, empty persistent cache (full extended-CoSA DSE),
   * warm  — fresh backend, persistent cache populated by the cold run
             (zero DSE sweeps; everything deserializes from disk),
-  * inmem — same backend object recompiling (in-process memoization).
+  * inmem — recompiling against the memoized per-target backend
+            (in-process memoization).
 
 Emits ``(name, us_per_call, derived)`` rows for the benchmark CSV contract.
 """
@@ -26,34 +27,43 @@ def _graph():
 def main() -> list[tuple[str, float, str]]:
     import repro
 
+    fresh = repro.CompileOptions(fresh_backend=True)
     rows: list[tuple[str, float, str]] = []
     with tempfile.TemporaryDirectory() as cache_dir:
+        target = repro.Target("edge_npu", cache_dir=cache_dir)
         t0 = time.perf_counter()
-        cold = repro.integrate("edge_npu", cache_dir=cache_dir)
-        cold.compile(_graph(), mode="proposed")
+        cold = repro.compile(_graph(), target, options=fresh)
         cold_us = (time.perf_counter() - t0) * 1e6
         rows.append(
-            ("integrate_cold", cold_us, f"dse_sweeps={cold.scheduler.n_solver_calls}")
+            (
+                "integrate_cold",
+                cold_us,
+                f"dse_sweeps={cold.backend.scheduler.n_solver_calls}",
+            )
         )
 
         t0 = time.perf_counter()
-        warm = repro.integrate("edge_npu", cache_dir=cache_dir)
-        warm.compile(_graph(), mode="proposed")
+        warm = repro.compile(_graph(), target, options=fresh)
         warm_us = (time.perf_counter() - t0) * 1e6
         rows.append(
             (
                 "integrate_warm",
                 warm_us,
-                f"dse_sweeps={warm.scheduler.n_solver_calls};"
+                f"dse_sweeps={warm.backend.scheduler.n_solver_calls};"
                 f"speedup={cold_us / max(warm_us, 1e-9):.1f}x",
             )
         )
 
+        repro.compile(_graph(), target)  # populate the per-target memo
         t0 = time.perf_counter()
-        warm.compile(_graph(), mode="proposed")
+        inmem = repro.compile(_graph(), target)
         inmem_us = (time.perf_counter() - t0) * 1e6
         rows.append(
-            ("integrate_inmem", inmem_us, f"cache_hits={warm.schedule_cache.stats.hits}")
+            (
+                "integrate_inmem",
+                inmem_us,
+                f"cache_hits={inmem.backend.schedule_cache.stats.hits}",
+            )
         )
     return rows
 

@@ -69,7 +69,7 @@ def toycar() -> dict:
     ref = ir.execute_graph(toycar_graph(), {"x": x})[0]
     out = {}
     for mode in ("c_toolchain", "proposed", "naive"):
-        mod = backend.compile(toycar_graph(), mode=mode)
+        mod = backend.compile_graph(toycar_graph(), mode=mode)
         got = mod.run({"x": x})[0]
         assert np.array_equal(got, ref), f"{mode} functional mismatch"
         out[mode] = mod.modeled_cycles()["total"]

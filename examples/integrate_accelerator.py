@@ -3,10 +3,10 @@
 We define "EdgeMM", a fictional 32x32 weight-stationary edge accelerator
 with a 512 KiB unified SRAM, entirely through the public description API
 (no compiler internals), register it with the accelerator registry, and
-hand it to ``repro.integrate()`` — one call that validates the description,
-generates the full compiler backend, and attaches the persistent schedule
-cache.  The same quantized model then compiles and runs on it in all three
-pipeline modes.
+compile straight through ``repro.compile(graph, Target("edgemm", ...))`` —
+the front door validates the description, generates the full compiler
+backend, and attaches the persistent schedule cache.  The same quantized
+model then compiles and runs on it in all three pipeline modes.
 
     PYTHONPATH=src python examples/integrate_accelerator.py
 
@@ -107,11 +107,16 @@ def main():
     ref = ir.execute_graph(build_graph(np.random.default_rng(0)), {"x": x_val})[0]
 
     with tempfile.TemporaryDirectory() as cache_dir:
-        backend = repro.integrate("edgemm", cache_dir=cache_dir)
+        # compile through the front door: the new name is a Target like any
+        # in-tree accelerator — no compiler-internal edits anywhere.
+        fresh = repro.CompileOptions(fresh_backend=True)
         proposed_mod = None
-        for mode in ("proposed", "c_toolchain", "naive"):
-            mod = backend.compile(build_graph(np.random.default_rng(0)), mode=mode)
-            if mode == "proposed":
+        for mode in ("optimized", "baseline", "naive"):
+            mod = repro.compile(
+                build_graph(np.random.default_rng(0)),
+                repro.Target("edgemm", mode=mode, cache_dir=cache_dir),
+            )
+            if mode == "optimized":
                 proposed_mod = mod
             out = mod.run({"x": x_val})[0]
             print(
@@ -127,11 +132,15 @@ def main():
 
         # recompile in a FRESH backend: everything comes from the persistent
         # schedule cache — zero extended-CoSA DSE sweeps.
-        warm = repro.integrate("edgemm", cache_dir=cache_dir)
-        warm.compile(build_graph(np.random.default_rng(0)), mode="proposed")
+        warm = repro.compile(
+            build_graph(np.random.default_rng(0)),
+            repro.Target("edgemm", cache_dir=cache_dir),
+            options=fresh,
+        )
         print(
-            f"warm recompile: scheduler sweeps={warm.scheduler.n_solver_calls}, "
-            f"cache hits={warm.schedule_cache.stats.hits}"
+            f"warm recompile: scheduler sweeps="
+            f"{warm.backend.scheduler.n_solver_calls}, "
+            f"cache hits={warm.backend.schedule_cache.stats.hits}"
         )
 
 

@@ -1,53 +1,72 @@
-"""Quickstart: the paper's flow in ~40 lines.
+"""Quickstart: the paper's flow through the one front door, in ~40 lines.
 
-1. Take an accelerator description (here: the bundled Gemmini model).
-2. ``build_backend`` generates the whole compiler backend from it.
-3. Compile a quantized dense graph in the three evaluation modes.
+1. Write a model as a plain ``jax.numpy`` function (weights in a params
+   dict, quantization in the recognized ``repro.frontend.nn`` idioms).
+2. Declare a ``Target`` (accelerator + mode) — no compiler internals.
+3. ``repro.compile(fn, target, example_inputs, params)`` traces the
+   function, imports the jaxpr into core IR, and compiles it.
 4. Execute (bit-exact vs the graph reference) + read modeled cycles.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import warnings
+
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_backend, ir
-from repro.core.descriptions import make_gemmini_description
+import repro
+from repro.core import ir
+from repro.frontend import nn, trace_model
 
 
-def quantized_dense_graph():
+def qdense(x, params):
+    """One quantized dense layer, written in plain jnp: float weights are
+    transposed + quantized inside the function, so the compiler folds the
+    preparation at compile time (the naive BYOC mode pays at run time)."""
+    w_q = nn.quantize(jnp.transpose(params["w"]), 0.03125)
+    d = nn.dense(x, w_q) + params["b"]
+    return jnp.clip(nn.requantize(d, 0.125), -128, 127)
+
+
+def make_params():
     rng = np.random.default_rng(0)
-    x = ir.input_((8, 256), "int8", name="x")
-    # weights enter as float (K, C) + registered preprocessing ops
-    w = ir.quantize(
-        ir.transpose(ir.const(rng.normal(size=(128, 256)).astype(np.float32) * 0.02)),
-        scale=0.02,
-    )
-    b = ir.const(rng.integers(-100, 100, size=(128,)).astype(np.int32))
-    out = ir.clip(ir.requantize(ir.bias_add(ir.dense(x, w), b), scale=0.125))
-    return ir.Graph([out], name="quickstart_qdense")
+    return {
+        "w": (rng.normal(size=(128, 256)) * 0.02).astype(np.float32),
+        "b": rng.integers(-100, 100, size=(128,)).astype(np.int32),
+    }
 
 
 def main():
-    desc = make_gemmini_description()
-    backend = build_backend(desc)  # <- the paper's one-call integration
+    # the repo's own examples run with deprecations as hard errors: the
+    # quickstart must never drift back onto the legacy two-step API
+    warnings.simplefilter("error", repro.ReproDeprecationWarning)
 
+    params = make_params()
     x = np.random.default_rng(1).integers(-128, 128, (8, 256)).astype(np.int8)
-    ref = ir.execute_graph(quantized_dense_graph(), {"x": x})[0]
 
-    for mode in ("proposed", "c_toolchain", "naive"):
-        mod = backend.compile(quantized_dense_graph(), mode=mode)
+    # reference semantics from the imported graph, independent of any target
+    graph = trace_model(qdense, {"x": x}, params)
+    ref = ir.execute_graph(graph, {"x": x})[0]
+
+    for spec in ("gemmini:optimized", "gemmini:baseline", "gemmini:naive"):
+        target = repro.Target.parse(spec)
+        mod = repro.compile(qdense, target, example_inputs={"x": x}, params=params)
         out = mod.run({"x": x})[0]
         cycles = mod.modeled_cycles()
         print(
-            f"{mode:12s} exact={np.array_equal(out, ref)} "
+            f"{spec:20s} exact={np.array_equal(out, ref)} "
             f"cycles={cycles['total']:>12,.0f} (host={cycles['host']:,.0f})"
         )
 
     # what the staged pass pipeline actually did (the abstraction claim,
     # visible: every rewrite is a named, counted, timed unit)
-    mod = backend.compile(quantized_dense_graph(), mode="proposed")
+    mod = repro.compile(
+        qdense, "gemmini:optimized", example_inputs={"x": x}, params=params
+    )
     print()
     print(mod.pass_report.summary())
+    print(f"inputs: {mod.input_signature()}")
 
     # inspect the schedule the extended-CoSA MIP picked
     for name, sched in mod.schedules().items():

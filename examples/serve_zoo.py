@@ -1,12 +1,14 @@
 """Serving a zoo model through the planned graph executor.
 
-Compiles a model-zoo network once, then drives repeated inference with
-``run_many`` — the compiled ``ExecutionPlan`` (flat step list, slot-indexed
-buffer arena, pre-padded constant weight panels) is built at compile time
-and reused across every call.  The legacy per-node interpreter is run on
-the same traffic for comparison; both paths are bit-exact.
+Compiles a model-zoo network once through the ``repro.compile()`` front
+door (the zoo name routes through the traced-JAX frontend), then drives
+repeated inference with ``run_many`` — the compiled ``ExecutionPlan`` (flat
+step list, slot-indexed buffer arena, pre-padded constant weight panels) is
+built at compile time and reused across every call.  The legacy per-node
+interpreter is run on the same traffic for comparison; both paths are
+bit-exact.
 
-    PYTHONPATH=src python examples/serve_zoo.py [model]
+    PYTHONPATH=src python examples/serve_zoo.py [model] [accelerator:mode]
 """
 
 import sys
@@ -18,10 +20,11 @@ import repro
 from repro.core.zoo import get_model, model_names
 
 
-def main(model_name: str = "mlp_tiny"):
+def main(model_name: str = "mlp_tiny", target: str = "gemmini:optimized"):
     model = get_model(model_name)
-    backend = repro.integrate("gemmini", cache=False)
-    module = backend.compile(model.build(), mode="proposed")
+    module = repro.compile(
+        model_name, repro.Target.parse(target, cache=False)
+    )
 
     traffic = [model.feeds(seed=s) for s in range(256)]
     planned = module.run_many(traffic)
@@ -57,4 +60,4 @@ if __name__ == "__main__":
         print(__doc__)
         print("models:", ", ".join(model_names()))
         raise SystemExit(0)
-    main(name)
+    main(name, sys.argv[2] if len(sys.argv) > 2 else "gemmini:optimized")

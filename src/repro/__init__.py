@@ -2,51 +2,84 @@
 accelerators (reproduction of "A High-Level Compiler Integration Approach
 for Deep Learning Accelerators Supporting Abstraction and Optimization").
 
-The one-call integration surface:
+The one front door:
 
     import repro
 
-    backend = repro.integrate("edge_npu")     # registered name, or pass an
-                                              # AcceleratorDescription object
-    module = backend.compile(graph, mode="proposed")
-    outputs = module.run(feeds)
+    # compile a plain jax.numpy callable for a registered accelerator
+    module = repro.compile(
+        fn,
+        target=repro.Target("gemmini", mode="optimized"),
+        example_inputs={"x": x},
+        params=params,
+    )
+    outputs = module.run({"x": x})
     cycles = module.modeled_cycles()
 
+``repro.compile`` also accepts an ``ir.Graph`` or a model-zoo name, and
+``Target.parse("gemmini:optimized")`` turns one CLI string into a target.
 New accelerators register a description factory:
 
     @repro.register_accelerator("my_npu")
     def make_my_npu() -> repro.AcceleratorDescription:
         ...
 
-See ``docs/integration_guide.md`` for the full tutorial.
+The legacy two-step flow (``repro.integrate`` + ``backend.compile``) still
+works but emits ``ReproDeprecationWarning``.  See
+``docs/integration_guide.md`` for the full tutorial.
 """
 
+from repro.api import (
+    CapabilityError,
+    CompileOptions,
+    Target,
+    TargetError,
+    backend_for,
+    clear_backend_cache,
+    compile,
+)
 from repro.core.accel import AcceleratorDescription
 from repro.core.arch_spec import ArchSpec, GemmWorkload, conv2d_as_gemm
+from repro.core.deprecation import ReproDeprecationWarning
+from repro.core.executor import FeedError
 from repro.core.registry import (
     REGISTRY,
     AcceleratorRegistry,
     IntegrationError,
+    build_integrated_backend,
     integrate,
     register_accelerator,
     validate_description,
 )
 from repro.core.schedule_cache import ScheduleCache, default_cache_dir
+from repro.frontend import UnsupportedJaxprError, trace_model
 
-__version__ = "0.1.0"
+__version__ = "0.2.0"
 
 __all__ = [
     "AcceleratorDescription",
     "AcceleratorRegistry",
     "ArchSpec",
+    "CapabilityError",
+    "CompileOptions",
+    "FeedError",
     "GemmWorkload",
     "IntegrationError",
     "REGISTRY",
+    "ReproDeprecationWarning",
     "ScheduleCache",
+    "Target",
+    "TargetError",
+    "UnsupportedJaxprError",
+    "backend_for",
+    "build_integrated_backend",
+    "clear_backend_cache",
+    "compile",
     "conv2d_as_gemm",
     "default_cache_dir",
     "integrate",
     "register_accelerator",
+    "trace_model",
     "validate_description",
     "__version__",
 ]

@@ -1,0 +1,295 @@
+"""The one front door: ``repro.compile(model, target=...)``.
+
+The paper's pitch is that users target accelerators *without navigating
+compiler internals*.  This module is that surface: a ``Target`` names the
+accelerator and optimization mode (validated up front, every problem
+listed), ``CompileOptions`` carries per-compile knobs, and ``compile()``
+accepts whatever the user already has —
+
+    import repro
+
+    # an ir.Graph
+    module = repro.compile(graph, target=repro.Target("gemmini"))
+
+    # a model-zoo name (one string for CLIs / benchmarks)
+    module = repro.compile("toycar_mlp", target="edge_npu:optimized")
+
+    # a plain jax.numpy callable + example inputs (traced frontend)
+    module = repro.compile(
+        fn,
+        target=repro.Target("gemmini", mode="optimized"),
+        example_inputs={"x": x},
+        params=params,
+    )
+
+    outputs = module.run({"x": x})
+    cycles = module.modeled_cycles()
+
+The legacy two-step flow (``repro.integrate()`` then ``backend.compile()``)
+keeps working but is deprecated; it maps 1:1 onto this surface.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from pathlib import Path
+
+from repro.core.accel import AcceleratorDescription
+from repro.core.ir import Graph
+from repro.core.pass_manager import PassContext
+from repro.core.pipeline import PUBLIC_MODES, CompilerBackend, resolve_mode
+from repro.core.registry import REGISTRY, build_integrated_backend
+
+
+class TargetError(ValueError):
+    """A target failed validation; ``.problems`` lists every issue."""
+
+    def __init__(self, spec: str, problems: list[str]):
+        self.problems = problems
+        bullet = "\n  - ".join(problems)
+        super().__init__(f"invalid target {spec!r}:\n  - {bullet}")
+
+
+class CapabilityError(ValueError):
+    """``allow_host_fallback=False`` and the target cannot run every core
+    op; ``.problems`` lists each op left on the host."""
+
+    def __init__(self, name: str, problems: list[str]):
+        self.problems = problems
+        bullet = "\n  - ".join(problems)
+        super().__init__(
+            f"accelerator {name!r} cannot offload the whole model "
+            f"(allow_host_fallback=False):\n  - {bullet}"
+        )
+
+
+@dataclass(frozen=True)
+class Target:
+    """Where and how to compile: accelerator + mode + scheduler options.
+
+    ``accelerator`` is a registered name or an ``AcceleratorDescription``;
+    ``mode`` is one of ``naive`` / ``baseline`` / ``optimized`` (the paper's
+    evaluation matrix; the internal mode names are accepted as aliases).
+    Construction validates everything it can and raises ``TargetError``
+    listing every problem at once.
+    """
+
+    accelerator: str | AcceleratorDescription
+    mode: str = "optimized"
+    use_mip: bool = True
+    use_pallas: bool = False
+    cache: bool = True
+    cache_dir: str | Path | None = None
+    parallel_dse: bool = False
+
+    def __post_init__(self):
+        problems = []
+        try:
+            resolve_mode(self.mode)
+        except ValueError:
+            problems.append(
+                f"unknown mode {self.mode!r}; expected one of "
+                f"{', '.join(PUBLIC_MODES)}"
+            )
+        if isinstance(self.accelerator, str):
+            if self.accelerator not in REGISTRY:
+                known = ", ".join(REGISTRY.names()) or "<none>"
+                problems.append(
+                    f"unknown accelerator {self.accelerator!r}; "
+                    f"registered: {known}"
+                )
+        elif not isinstance(self.accelerator, AcceleratorDescription):
+            problems.append(
+                f"accelerator must be a registered name or an "
+                f"AcceleratorDescription, got {type(self.accelerator).__name__}"
+            )
+        if self.cache_dir is not None and not self.cache:
+            problems.append("cache_dir given but cache=False")
+        if problems:
+            raise TargetError(self.describe(), problems)
+
+    @classmethod
+    def parse(cls, spec: str, **overrides) -> "Target":
+        """Parse ``"accelerator[:mode]"`` — the one-string form CLIs and
+        benchmarks pass around, e.g. ``Target.parse("gemmini:optimized")``."""
+        parts = spec.split(":")
+        if len(parts) > 2 or not parts[0]:
+            raise TargetError(
+                spec, ["expected 'accelerator' or 'accelerator:mode'"]
+            )
+        if len(parts) == 2:
+            if "mode" in overrides and overrides["mode"] != parts[1]:
+                raise TargetError(
+                    spec,
+                    [
+                        f"spec names mode {parts[1]!r} but mode="
+                        f"{overrides['mode']!r} was also passed"
+                    ],
+                )
+            overrides["mode"] = parts[1]
+        return cls(parts[0], **overrides)
+
+    def describe(self) -> str:
+        name = (
+            self.accelerator
+            if isinstance(self.accelerator, str)
+            else getattr(self.accelerator, "name", "<description>")
+        )
+        return f"{name}:{self.mode}"
+
+    @property
+    def internal_mode(self) -> str:
+        return resolve_mode(self.mode)
+
+    def with_mode(self, mode: str) -> "Target":
+        return replace(self, mode=mode)
+
+
+@dataclass(frozen=True)
+class CompileOptions:
+    """Per-compile knobs orthogonal to the target."""
+
+    #: explicit pass list overriding the per-mode pipeline (experiments)
+    passes: list | None = None
+    #: trace/dump instrumentation context for the pass manager
+    pass_context: PassContext | None = None
+    #: False -> raise CapabilityError if any dense/conv stays on the host
+    allow_host_fallback: bool = True
+    #: True -> build a fresh backend instead of reusing the per-target one
+    #: (benchmarking cold integration, isolating solver-call counters)
+    fresh_backend: bool = False
+
+
+# one backend per (accelerator fingerprint, backend options): repeated
+# compiles share the scheduler's in-memory memo on top of the persistent
+# schedule cache, so sweeping modes/models never repeats a DSE sweep.
+# Bounded FIFO so long-lived processes sweeping many descriptions or
+# throwaway cache dirs cannot grow memory monotonically.
+_BACKENDS: dict[tuple, CompilerBackend] = {}
+_BACKENDS_MAX = 16
+
+
+def clear_backend_cache() -> None:
+    """Drop every memoized backend (fresh schedulers on the next compile)."""
+    _BACKENDS.clear()
+
+
+def backend_for(target: Target, *, fresh: bool = False) -> CompilerBackend:
+    """Resolve (and memoize) the generated backend for a target.  The mode
+    is a compile-time property, so all modes of one accelerator share a
+    backend.  Raises ``IntegrationError`` for an invalid description."""
+    desc = (
+        REGISTRY.get(target.accelerator)
+        if isinstance(target.accelerator, str)
+        else target.accelerator
+    )
+    key = (
+        desc.fingerprint(),
+        target.use_mip,
+        target.use_pallas,
+        target.cache,
+        str(target.cache_dir),
+        target.parallel_dse,
+    )
+    if not fresh and key in _BACKENDS:
+        return _BACKENDS[key]
+    backend = build_integrated_backend(
+        desc,
+        use_mip=target.use_mip,
+        use_pallas=target.use_pallas,
+        cache=target.cache,
+        cache_dir=target.cache_dir,
+        parallel_dse=target.parallel_dse,
+    )
+    if not fresh:
+        while len(_BACKENDS) >= _BACKENDS_MAX:
+            _BACKENDS.pop(next(iter(_BACKENDS)))
+        _BACKENDS[key] = backend
+    return backend
+
+
+def _graph_for(model, example_inputs, params) -> Graph:
+    if isinstance(model, Graph):
+        if example_inputs is not None or params is not None:
+            raise ValueError(
+                "example_inputs/params only apply to traced callables, "
+                "not prebuilt ir.Graph models"
+            )
+        return model
+    if isinstance(model, str):
+        from repro.core.zoo import get_model
+
+        if example_inputs is not None or params is not None:
+            raise ValueError(
+                "zoo models carry their own inputs and parameters; "
+                "drop example_inputs/params"
+            )
+        return get_model(model).trace()
+    if callable(model):
+        if not isinstance(example_inputs, dict) or not example_inputs:
+            raise ValueError(
+                "compiling a traced callable needs example_inputs: a dict "
+                "mapping input names to example arrays, e.g. "
+                "repro.compile(fn, target, example_inputs={'x': x})"
+            )
+        from repro.frontend import trace_model
+
+        return trace_model(model, example_inputs, params)
+    raise TypeError(
+        f"model must be an ir.Graph, a zoo model name, or a jax.numpy "
+        f"callable; got {type(model).__name__}"
+    )
+
+
+def _check_offload(module) -> None:
+    desc = module.desc
+    left_on_host = [
+        f"{n.name}: {n.op} {list(n.shape)} ({n.dtype})"
+        for n in module.graph.toposort()
+        if n.target != "accel"
+        and n.op.replace("generalized_", "") in ("dense", "conv2d", "matmul")
+    ]
+    if left_on_host:
+        left_on_host.append(
+            f"(supported core ops: {', '.join(sorted(desc.supported_ops()))})"
+        )
+        raise CapabilityError(desc.name, left_on_host)
+
+
+def compile(
+    model,
+    target: Target | str,
+    *,
+    example_inputs: dict | None = None,
+    params=None,
+    options: CompileOptions | None = None,
+):
+    """Compile a model for a target — the one entry point.
+
+    Args:
+      model: an ``ir.Graph``, a zoo model name (``repro.core.zoo``), or a
+        plain ``jax.numpy`` callable (traced via ``repro.frontend``).
+      target: a ``Target`` or an ``"accelerator[:mode]"`` string.
+      example_inputs: for callables — dict of input name -> example array
+        (shape/dtype only; values are not used).
+      params: for callables — optional pytree of weight arrays, imported as
+        graph constants (keeps weight preprocessing foldable).
+      options: ``CompileOptions``.
+
+    Returns a ``CompiledModule``: ``run(feeds)`` / ``run_many(feeds_list)``
+    execute it, ``modeled_cycles()`` reads the cycle model.
+    """
+    if isinstance(target, str):
+        target = Target.parse(target)
+    options = options or CompileOptions()
+    graph = _graph_for(model, example_inputs, params)
+    backend = backend_for(target, fresh=options.fresh_backend)
+    module = backend.compile_graph(
+        graph,
+        mode=target.internal_mode,
+        passes=options.passes,
+        pass_context=options.pass_context,
+    )
+    if not options.allow_host_fallback:
+        _check_offload(module)
+    return module

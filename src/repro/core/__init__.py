@@ -15,10 +15,12 @@ from repro.core.pass_manager import PassContext, PassManager, PipelineReport
 from repro.core.passes import frontend_passes, passes_for_mode
 from repro.core.pipeline import CompiledModule, ExecutionPlan
 from repro.core.rewrite import P, Match, OpPattern, RewriteRule, any_, apply_rules, rule
+from repro.core.deprecation import ReproDeprecationWarning
 from repro.core.registry import (
     REGISTRY,
     AcceleratorRegistry,
     IntegrationError,
+    build_integrated_backend,
     integrate,
     register_accelerator,
     validate_description,
@@ -44,12 +46,14 @@ __all__ = [
     "PassManager",
     "PipelineReport",
     "REGISTRY",
+    "ReproDeprecationWarning",
     "RewriteRule",
     "Schedule",
     "ScheduleCache",
     "any_",
     "apply_rules",
     "build_backend",
+    "build_integrated_backend",
     "conv2d_as_gemm",
     "frontend_passes",
     "integrate",

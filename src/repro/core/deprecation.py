@@ -1,0 +1,25 @@
+"""Deprecation plumbing for the legacy two-step API.
+
+The repo-specific warning class exists so the test suite can turn *our*
+deprecations into hard errors (``filterwarnings`` in ``pyproject.toml``)
+without tripping over DeprecationWarnings raised by third-party imports.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+
+class ReproDeprecationWarning(DeprecationWarning):
+    """A repro API is deprecated in favor of the ``repro.compile()`` front
+    door.  Subclassing ``DeprecationWarning`` keeps standard tooling
+    (``python -W``, pytest) able to address it generically."""
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} instead "
+        f"(see docs/integration_guide.md)",
+        ReproDeprecationWarning,
+        stacklevel=3,
+    )

@@ -12,7 +12,7 @@ with the accelerator registry — no compiler internals are touched.  This is
 the worked example of ``docs/integration_guide.md``:
 
     import repro
-    backend = repro.integrate("edge_npu")
+    module = repro.compile(model, repro.Target("edge_npu"))
 """
 
 from __future__ import annotations

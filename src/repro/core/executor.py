@@ -112,6 +112,20 @@ def compile_host_op(n: Node) -> Callable[..., np.ndarray]:
     return lambda *ins, _n=n: execute_node(_n, list(ins))
 
 
+class FeedError(KeyError, ValueError):
+    """A ``run``/``run_many`` feeds dict does not match the module's input
+    signature; the message lists every unknown and missing name plus the
+    expected signature.  Subclasses ``KeyError`` so pre-existing callers
+    catching the old missing-feed error keep working."""
+
+    def __init__(self, message: str):
+        self.message = message
+        super().__init__(message)
+
+    def __str__(self):  # KeyError would repr() the message
+        return self.message
+
+
 # arena slot 0 permanently holds None so optional (absent) operands can be
 # addressed like any other input slot.
 _NONE_SLOT = 0
@@ -221,7 +235,50 @@ class CompiledModule:
     #: PipelineReport from the PassManager run that lowered the graph
     #: (None for hand-assembled modules).
     pass_report: Any = None
+    #: the CompilerBackend that produced this module (None for
+    #: hand-assembled modules); exposes scheduler/cache introspection.
+    backend: Any = field(default=None, repr=False)
     _arena: list | None = field(default=None, repr=False)
+    _feed_names: frozenset | None = field(default=None, repr=False)
+
+    # -- input signature / feed validation ----------------------------------
+    def input_signature(self) -> tuple[tuple[str, tuple[int, ...], str], ...]:
+        """(name, shape, dtype) for every graph input, in topological order."""
+        return tuple((n.name, n.shape, n.dtype) for n in self.graph.inputs())
+
+    def _check_feeds(self, feeds: dict[str, np.ndarray]) -> None:
+        """Validate feeds up front against the input signature: ONE error
+        listing every unknown name, missing name, and shape/dtype mismatch,
+        instead of a bare KeyError (or silently wrong numerics) halfway
+        through execution."""
+        if self._feed_names is None:
+            self._feed_names = frozenset(n.name for n in self.graph.inputs())
+        problems = []
+        if feeds.keys() != self._feed_names:
+            for name in sorted(self._feed_names - feeds.keys()):
+                problems.append(f"missing feed for input {name!r}")
+            for name in sorted(feeds.keys() - self._feed_names):
+                problems.append(f"unknown feed {name!r}")
+        for name, shape, dtype in self.input_signature():
+            if name not in feeds:
+                continue
+            value = np.asarray(feeds[name])
+            if value.shape != shape or str(value.dtype) != dtype:
+                problems.append(
+                    f"feed {name!r} is {value.dtype}{list(value.shape)}, "
+                    f"expected {dtype}{list(shape)}"
+                )
+        if not problems:
+            return
+        sig = ", ".join(
+            f"{name}: {dtype}{list(shape)}"
+            for name, shape, dtype in self.input_signature()
+        )
+        bullet = "\n  - ".join(problems)
+        raise FeedError(
+            f"feeds do not match the module's inputs:\n  - {bullet}\n"
+            f"expected inputs: {sig or '<none>'}"
+        )
 
     # -- execution ---------------------------------------------------------
     def finalize(self) -> "ExecutionPlan":
@@ -238,6 +295,7 @@ class CompiledModule:
         """Execute the module.  ``use_plan=False`` runs the legacy per-node
         interpreter (kept for planned-vs-interpreted equivalence testing and
         as the baseline of ``benchmarks/table2_bench.py``)."""
+        self._check_feeds(feeds)
         if not use_plan:
             return self._run_interpreted(feeds)
         plan = self.finalize()
@@ -249,6 +307,8 @@ class CompiledModule:
         """Repeated invocation over a list of feeds (serving-style traffic);
         the plan and buffer arena are built once and reused for every call.
         Not thread-safe: concurrent callers must hold their own module."""
+        for feeds in feeds_list:
+            self._check_feeds(feeds)
         if not use_plan:
             return [self._run_interpreted(f) for f in feeds_list]
         plan = self.finalize()

@@ -375,6 +375,28 @@ def _partition(graph: Graph, ctx: PassContext) -> int:
 # ---------------------------------------------------------------------------
 
 
+def _capability_filtered(rules, desc: AcceleratorDescription):
+    """Capability negotiation for legalization: fusing a chain into a
+    generalized op is only useful when the target can actually run the core
+    op — a host-resident generalized op has no executor.  Chains whose core
+    the description does not support stay as plain ops, which the host
+    executes cleanly after partitioning."""
+    from repro.core.rewrite import RewriteRule
+
+    supported = desc.supported_ops()
+
+    def filtered(r):
+        def build(m: Match, graph: Graph, _build=r.build):
+            core = m.captures.get("core")
+            if core is not None and core.op not in supported:
+                return None
+            return _build(m, graph)
+
+        return RewriteRule(name=r.name, pattern=r.pattern, build=build)
+
+    return tuple(filtered(r) for r in rules)
+
+
 def frontend_passes(
     desc: AcceleratorDescription,
     *,
@@ -396,7 +418,11 @@ def frontend_passes(
         )
     if legalize:
         passes.append(
-            rewrite_pass("legalize", LEGALIZE_RULES, "fuse chains into generalized ops")
+            rewrite_pass(
+                "legalize",
+                _capability_filtered(LEGALIZE_RULES, desc),
+                "fuse chains into generalized ops",
+            )
         )
         target_rules = tuple(getattr(desc, "rewrite_rules", ()) or ())
         if target_rules:

@@ -59,8 +59,33 @@ from repro.core.scheduler import ExtendedCosaScheduler, ScheduleResult
 from repro.core.simulator import simulate
 from repro.core.strategy import StrategyGenerator, workload_from_node
 from repro.core.baselines import c_toolchain_schedule, naive_schedule
+from repro.core.deprecation import warn_deprecated
 
 MODES = ("proposed", "c_toolchain", "naive")
+
+#: the user-facing mode names of the ``Target`` API (paper §4 matrix);
+#: each maps onto one of the internal ``MODES``.
+PUBLIC_MODES = ("naive", "baseline", "optimized")
+
+_MODE_ALIASES = {
+    "optimized": "proposed",
+    "baseline": "c_toolchain",
+    "naive": "naive",
+    # internal names remain accepted everywhere
+    "proposed": "proposed",
+    "c_toolchain": "c_toolchain",
+}
+
+
+def resolve_mode(mode: str) -> str:
+    """Canonicalize a public or internal mode name to the internal one."""
+    try:
+        return _MODE_ALIASES[mode]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown mode {mode!r}; expected one of {PUBLIC_MODES} "
+            f"(or internal {MODES})"
+        ) from None
 
 
 @dataclass
@@ -122,8 +147,25 @@ class CompilerBackend:
         rep = simulate(sched, self.desc.arch)
         return ScheduleResult(best=sched, report=rep, n_candidates=1, n_infeasible=0)
 
-    # -- the public entry point ---------------------------------------------
+    # -- the compile entry point --------------------------------------------
     def compile(
+        self,
+        graph: Graph,
+        mode: str = "proposed",
+        *,
+        passes: list | None = None,
+        pass_context: PassContext | None = None,
+    ) -> CompiledModule:
+        """Deprecated spelling of :meth:`compile_graph` — the public entry
+        point is now ``repro.compile(model, target=...)``."""
+        warn_deprecated(
+            "CompilerBackend.compile()", "repro.compile(model, target=...)"
+        )
+        return self.compile_graph(
+            graph, mode, passes=passes, pass_context=pass_context
+        )
+
+    def compile_graph(
         self,
         graph: Graph,
         mode: str = "proposed",
@@ -134,12 +176,12 @@ class CompilerBackend:
         """Compile a graph: run the mode's pass pipeline, schedule every
         accelerator node, lower executors, and build the execution plan.
 
-        ``passes`` overrides the per-mode pipeline with an explicit pass
-        list (testing / experimentation); ``pass_context`` overrides the
-        trace/dump instrumentation context.
+        ``mode`` accepts public (``optimized``/``baseline``/``naive``) or
+        internal names.  ``passes`` overrides the per-mode pipeline with an
+        explicit pass list (testing / experimentation); ``pass_context``
+        overrides the trace/dump instrumentation context.
         """
-        if mode not in MODES:
-            raise ValueError(f"mode must be one of {MODES}")
+        mode = resolve_mode(mode)
         pm = PassManager(
             passes_for_mode(self.desc, mode) if passes is None else passes
         )
@@ -150,7 +192,8 @@ class CompilerBackend:
         )
         report = pm.run(graph, ctx)
         module = CompiledModule(
-            graph=graph, desc=self.desc, mode=mode, pass_report=report
+            graph=graph, desc=self.desc, mode=mode, pass_report=report,
+            backend=self,
         )
         for n in graph.toposort():
             if n.target != "accel":

@@ -1,21 +1,20 @@
-"""Accelerator integration registry — the one-call integration surface.
+"""Accelerator integration registry — the backend-generation machinery.
 
 The paper's headline claim is that a new GEMM accelerator integrates into
 the compiler "without requiring in-depth knowledge of the underlying
 compiler".  This module is that claim made concrete, following the BYOC
 registration pattern: accelerator descriptions register under a name, and
-``integrate()`` turns a description (or a registered name) into a fully
-generated ``CompilerBackend`` in one call —
+``build_integrated_backend()`` turns a description (or a registered name)
+into a fully generated ``CompilerBackend``.  Users reach it through the
+one front door —
 
     import repro
 
-    backend = repro.integrate("edge_npu")          # by registered name
-    backend = repro.integrate(my_description)      # or a description object
-
-    module = backend.compile(graph, mode="proposed")
+    module = repro.compile(model, repro.Target("edge_npu"))
     module.run(feeds); module.modeled_cycles()
 
-``integrate()`` additionally:
+(the deprecated ``repro.integrate()`` wraps the same machinery for the
+legacy two-step flow).  ``build_integrated_backend()`` additionally:
 
   * validates the description up front (required intrinsics, memory
     hierarchy sanity, dataflow coverage) and raises ``IntegrationError``
@@ -43,6 +42,7 @@ from typing import Callable
 from repro.core.accel import AcceleratorDescription
 from repro.core.arch_spec import GEMM_DIMS
 from repro.core.configurators import build_backend
+from repro.core.deprecation import warn_deprecated
 from repro.core.pipeline import CompilerBackend
 from repro.core.schedule_cache import ScheduleCache, default_cache_dir
 
@@ -180,7 +180,7 @@ def register_accelerator(
     return REGISTRY.register(name, factory, override=override, exist_ok=exist_ok)
 
 
-def integrate(
+def build_integrated_backend(
     accelerator: AcceleratorDescription | str,
     *,
     use_mip: bool = True,
@@ -189,7 +189,8 @@ def integrate(
     cache_dir: str | Path | None = None,
     parallel_dse: bool = False,
 ) -> CompilerBackend:
-    """One-call accelerator integration (the paper's headline API).
+    """Resolve, validate, and generate a backend — the integration machinery
+    behind ``repro.compile()`` (and the deprecated ``integrate()``).
 
     Args:
       accelerator: an ``AcceleratorDescription`` or a registered name.
@@ -220,3 +221,18 @@ def integrate(
         parallel_dse=parallel_dse,
         schedule_cache=schedule_cache,
     )
+
+
+def integrate(
+    accelerator: AcceleratorDescription | str,
+    **kwargs,
+) -> CompilerBackend:
+    """Deprecated spelling of the one-call integration — the public entry
+    point is now ``repro.compile(model, target=repro.Target(...))``, which
+    resolves and caches the backend itself.  This wrapper keeps the old
+    two-step flow working; it accepts the same keyword arguments as
+    ``build_integrated_backend``."""
+    warn_deprecated(
+        "repro.integrate()", "repro.compile(model, target=repro.Target(...))"
+    )
+    return build_integrated_backend(accelerator, **kwargs)

@@ -1,12 +1,12 @@
 """Model zoo: multi-layer workloads for the Table-2 end-to-end benchmark.
 
 The paper's headline evaluation (§4, Table 2) compares whole *networks*,
-not single GEMMs.  This module lowers three representative network classes
+not single GEMMs.  This module lowers four representative network classes
 into core IR graphs so the benchmark harness, the planned-executor
 equivalence tests, and the docs all measure the same artifacts:
 
-  * ``qcnn``        — int8 conv+conv+dense CNN (quantized TFLite-style op
-                      chains, conv via its im2col GEMM lowering);
+  * ``qcnn``        — int8 conv+pool+conv+dense CNN (quantized TFLite-style
+                      op chains, conv via its im2col GEMM lowering);
   * ``toycar_mlp``  — the MLPerf-Tiny ToyCar autoencoder of the paper's
                       Table 2 (640 -> 128x3 -> 8 -> 128x3 -> 640, int8);
   * ``mlp_tiny``    — a serving-size MLP whose layers each fit one PE tile;
@@ -16,11 +16,22 @@ equivalence tests, and the docs all measure the same artifacts:
                       host softmax), shapes taken from the musicgen smoke
                       config in ``repro.configs``.
 
+Every model exists in TWO equivalent forms sharing one set of parameters:
+
+  * ``build()`` — the hand-built ``ir.Graph`` (the golden reference);
+  * ``jnp_fn``  — a plain ``jax.numpy`` callable routed through the traced
+    frontend by ``trace()`` (what ``repro.compile("<name>", ...)`` uses).
+
+``tests/test_frontend.py`` holds the two forms bit-exact with identical
+modeled cycles in every mode.  Quantization scales are float32-exact
+(powers of two / small dyadics) so the scale literals the tracer extracts
+from the jaxpr equal the hand-built attributes bit-for-bit.
+
 Every model feeds float weights through the registered constant
 preprocessing chain (transpose + quantize), so the ``naive`` mode pays for
 weight preparation at run time exactly as the paper's naive BYOC baseline
-does.  Graphs are mutated by ``compile`` — ``build()`` returns a fresh
-graph per call.
+does.  Graphs are mutated by compilation — ``build()``/``trace()`` return a
+fresh graph per call.
 """
 
 from __future__ import annotations
@@ -28,14 +39,27 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ir
+from repro.frontend import nn as fnn
 
 ACCELERATORS = ("gemmini", "edge_npu", "tpu_v5e")
 
 # the paper's ToyCar autoencoder layer widths (MLPerf-Tiny anomaly det.)
 TOYCAR_LAYERS = (640, 128, 128, 128, 8, 128, 128, 128, 640)
+
+# float32-exact quantization scales (see module docstring)
+MLP_W_SCALE = 0.0625
+MLP_RQ_SCALE = 1.0 / 64.0
+QCNN_CONV_RQ = (0.0625, 0.046875)
+QCNN_DENSE_W = (0.03125, 0.0625)
+QCNN_DENSE_RQ = (0.125, 0.25)
+TF_W_SCALE = 0.0625
+TF_RQ_SCALE = 1.0 / 64.0
+TF_PROBS_SCALE = 1.0 / 128.0
 
 
 @dataclass(frozen=True)
@@ -43,6 +67,10 @@ class ZooModel:
     name: str
     description: str
     build: Callable[[], ir.Graph]
+    #: plain jax.numpy twin of ``build`` — ``fn(x, params)``
+    jnp_fn: Callable
+    #: parameter builder shared by both forms
+    params: Callable[[], dict]
     input_name: str
     input_shape: tuple[int, ...]
     input_dtype: str
@@ -54,6 +82,25 @@ class ZooModel:
         rng = np.random.default_rng(seed)
         x = rng.integers(-128, 128, size=self.input_shape)
         return {self.input_name: x.astype(self.input_dtype)}
+
+    def example_inputs(self) -> dict[str, np.ndarray]:
+        return {
+            self.input_name: np.zeros(self.input_shape, dtype=self.input_dtype)
+        }
+
+    def trace(self) -> ir.Graph:
+        """Build the model through the traced-JAX frontend (the path
+        ``repro.compile("<name>", ...)`` takes)."""
+        from repro.frontend import trace_model
+
+        return trace_model(
+            self.jnp_fn, self.example_inputs(), self.params(), name=self.name
+        )
+
+
+# ---------------------------------------------------------------------------
+# Shared layer helpers: hand-built IR form and the plain-jnp twin.
+# ---------------------------------------------------------------------------
 
 
 def _qdense(h: ir.Node, w_fp: np.ndarray, b: np.ndarray, *, w_scale: float,
@@ -71,23 +118,79 @@ def _qdense(h: ir.Node, w_fp: np.ndarray, b: np.ndarray, *, w_scale: float,
                    lo=clip_lo, hi=127)
 
 
+def _qdense_jnp(h, w_fp, b, *, w_scale: float, rq_scale: float,
+                clip_lo: int = -128):
+    w_q = fnn.quantize(jnp.transpose(w_fp), w_scale)
+    d = fnn.dense(h, w_q) + b
+    return jnp.clip(fnn.requantize(d, rq_scale), clip_lo, 127)
+
+
 def _qconv(h: ir.Node, w_q: np.ndarray, b: np.ndarray, *, stride: int = 1,
-           rq_scale: float = 0.05) -> ir.Node:
+           rq_scale: float = QCNN_CONV_RQ[0]) -> ir.Node:
     conv = ir.conv2d(h, ir.const(w_q), stride=stride)
     return ir.clip(ir.requantize(ir.bias_add(conv, ir.const(b)), scale=rq_scale))
 
 
+def _qconv_jnp(h, w_q, b, *, stride: int = 1,
+               rq_scale: float = QCNN_CONV_RQ[0]):
+    conv = fnn.conv2d(h, w_q, stride=stride) + b
+    return jnp.clip(fnn.requantize(conv, rq_scale), -128, 127)
+
+
+# ---------------------------------------------------------------------------
+# Quantized MLPs (ToyCar autoencoder + the serving-size variant).
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(layers=TOYCAR_LAYERS, seed: int = 0) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    for i in range(len(layers) - 1):
+        d_in, d_out = layers[i], layers[i + 1]
+        params[f"w{i}"] = (rng.normal(size=(d_out, d_in)) * 0.05).astype(np.float32)
+        params[f"b{i}"] = rng.integers(-64, 64, size=(d_out,)).astype(np.int32)
+    return params
+
+
 def mlp_graph(layers=TOYCAR_LAYERS, seed: int = 0, name: str = "mlp") -> ir.Graph:
     """Quantized MLP: each layer dense -> bias_add -> requantize -> clip."""
-    rng = np.random.default_rng(seed)
+    params = mlp_params(layers, seed)
     x = ir.input_((1, layers[0]), "int8", name="x")
     h = x
     for i in range(len(layers) - 1):
-        d_in, d_out = layers[i], layers[i + 1]
-        w_fp = (rng.normal(size=(d_out, d_in)) * 0.05).astype(np.float32)
-        b = rng.integers(-64, 64, size=(d_out,)).astype(np.int32)
-        h = _qdense(h, w_fp, b, w_scale=0.05, rq_scale=1.0 / 64.0)
+        h = _qdense(h, params[f"w{i}"], params[f"b{i}"],
+                    w_scale=MLP_W_SCALE, rq_scale=MLP_RQ_SCALE)
     return ir.Graph([h], name=name)
+
+
+def make_mlp_fn(layers=TOYCAR_LAYERS):
+    def mlp_fn(x, params):
+        h = x
+        for i in range(len(layers) - 1):
+            h = _qdense_jnp(h, params[f"w{i}"], params[f"b{i}"],
+                            w_scale=MLP_W_SCALE, rq_scale=MLP_RQ_SCALE)
+        return h
+
+    return mlp_fn
+
+
+# ---------------------------------------------------------------------------
+# Quantized CNN.
+# ---------------------------------------------------------------------------
+
+
+def qcnn_params(seed: int = 0) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return {
+        "conv0_w": rng.integers(-8, 8, (3, 3, 8, 16)).astype(np.int8),
+        "conv0_b": rng.integers(-50, 50, (16,)).astype(np.int32),
+        "conv1_w": rng.integers(-8, 8, (3, 3, 16, 16)).astype(np.int8),
+        "conv1_b": rng.integers(-50, 50, (16,)).astype(np.int32),
+        "dense0_w": (rng.normal(size=(32, 144)) * 0.02).astype(np.float32),
+        "dense0_b": rng.integers(-50, 50, (32,)).astype(np.int32),
+        "dense1_w": (rng.normal(size=(10, 32)) * 0.05).astype(np.float32),
+        "dense1_b": rng.integers(-50, 50, (10,)).astype(np.int32),
+    }
 
 
 def qcnn_graph(seed: int = 0) -> ir.Graph:
@@ -96,36 +199,61 @@ def qcnn_graph(seed: int = 0) -> ir.Graph:
     throughout.  The pool rides directly on the first conv's quantized
     chain, so the ``fuse_conv_pool`` pass folds it into the generalized
     conv's epilogue (the naive BYOC mode pays for it on the host)."""
-    rng = np.random.default_rng(seed)
+    p = qcnn_params(seed)
     x = ir.input_((1, 12, 12, 8), "int8", name="x")
-    h = _qconv(
-        x,
-        rng.integers(-8, 8, (3, 3, 8, 16)).astype(np.int8),
-        rng.integers(-50, 50, (16,)).astype(np.int32),
-    )
+    h = _qconv(x, p["conv0_w"], p["conv0_b"], rq_scale=QCNN_CONV_RQ[0])
     h = ir.max_pool2d(h, size=2, stride=2)  # (1, 5, 5, 16)
-    h = _qconv(
-        h,
-        rng.integers(-8, 8, (3, 3, 16, 16)).astype(np.int8),
-        rng.integers(-50, 50, (16,)).astype(np.int32),
-        rq_scale=0.04,
-    )
+    h = _qconv(h, p["conv1_w"], p["conv1_b"], rq_scale=QCNN_CONV_RQ[1])
     h = ir.flatten(h)  # (1, 3*3*16) zero-copy view
-    h = _qdense(
-        h,
-        (rng.normal(size=(32, 144)) * 0.02).astype(np.float32),
-        rng.integers(-50, 50, (32,)).astype(np.int32),
-        w_scale=0.02,
-        rq_scale=0.1,
-    )
-    h = _qdense(
-        h,
-        (rng.normal(size=(10, 32)) * 0.05).astype(np.float32),
-        rng.integers(-50, 50, (10,)).astype(np.int32),
-        w_scale=0.05,
-        rq_scale=0.25,
-    )
+    h = _qdense(h, p["dense0_w"], p["dense0_b"],
+                w_scale=QCNN_DENSE_W[0], rq_scale=QCNN_DENSE_RQ[0])
+    h = _qdense(h, p["dense1_w"], p["dense1_b"],
+                w_scale=QCNN_DENSE_W[1], rq_scale=QCNN_DENSE_RQ[1])
     return ir.Graph([h], name="qcnn")
+
+
+def qcnn_fn(x, params):
+    h = _qconv_jnp(x, params["conv0_w"], params["conv0_b"],
+                   rq_scale=QCNN_CONV_RQ[0])
+    h = fnn.max_pool2d(h, size=2, stride=2)
+    h = _qconv_jnp(h, params["conv1_w"], params["conv1_b"],
+                   rq_scale=QCNN_CONV_RQ[1])
+    h = jnp.reshape(h, (h.shape[0], -1))
+    h = _qdense_jnp(h, params["dense0_w"], params["dense0_b"],
+                    w_scale=QCNN_DENSE_W[0], rq_scale=QCNN_DENSE_RQ[0])
+    h = _qdense_jnp(h, params["dense1_w"], params["dense1_b"],
+                    w_scale=QCNN_DENSE_W[1], rq_scale=QCNN_DENSE_RQ[1])
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Quantized transformer encoder block.
+# ---------------------------------------------------------------------------
+
+
+def _transformer_dims() -> tuple[int, int]:
+    from repro.configs.musicgen_medium import smoke_config
+
+    cfg = smoke_config()
+    return cfg.d_model, cfg.d_ff
+
+
+def transformer_params(seed: int = 0) -> dict[str, np.ndarray]:
+    d_model, d_ff = _transformer_dims()
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    # draw order is part of the golden parameterization: q, k, v, attn, f1, f2
+    for tag, (d_in, d_out) in (
+        ("q", (d_model, d_model)),
+        ("k", (d_model, d_model)),
+        ("v", (d_model, d_model)),
+        ("attn", (d_model, d_model)),
+        ("f1", (d_model, d_ff)),
+        ("f2", (d_ff, d_model)),
+    ):
+        params[f"w_{tag}"] = (rng.normal(size=(d_out, d_in)) * 0.05).astype(np.float32)
+        params[f"b_{tag}"] = rng.integers(-64, 64, size=(d_out,)).astype(np.int32)
+    return params
 
 
 def transformer_block_graph(seed: int = 0, seq: int = 16) -> ir.Graph:
@@ -138,40 +266,56 @@ def transformer_block_graph(seed: int = 0, seq: int = 16) -> ir.Graph:
     epilogues (dequantize/softmax/quantize) on the host, which is exactly
     the structure BYOC partitioning produces for attention.
     """
-    from repro.configs.musicgen_medium import smoke_config
-
-    cfg = smoke_config()
-    d_model, d_ff = cfg.d_model, cfg.d_ff
-    rng = np.random.default_rng(seed)
+    d_model, _ = _transformer_dims()
+    p = transformer_params(seed)
     x = ir.input_((seq, d_model), "int8", name="x")
 
-    def proj(h, d_in, d_out, clip_lo=-128):
-        return _qdense(
-            h,
-            (rng.normal(size=(d_out, d_in)) * 0.05).astype(np.float32),
-            rng.integers(-64, 64, size=(d_out,)).astype(np.int32),
-            w_scale=0.05,
-            rq_scale=1.0 / 64.0,
-            clip_lo=clip_lo,
-        )
+    def proj(h, tag, clip_lo=-128):
+        return _qdense(h, p[f"w_{tag}"], p[f"b_{tag}"],
+                       w_scale=TF_W_SCALE, rq_scale=TF_RQ_SCALE,
+                       clip_lo=clip_lo)
 
-    q = proj(x, d_model, d_model)
-    k = proj(x, d_model, d_model)
-    v = proj(x, d_model, d_model)
+    q = proj(x, "q")
+    k = proj(x, "k")
+    v = proj(x, "v")
     # attention: int8 scores GEMM, softmax on the host in float
     scores = ir.dense(q, ir.transpose(k, (1, 0)))  # (seq, seq) int32
     probs = ir.quantize(
         ir.softmax(ir.dequantize(scores, scale=1.0 / (64.0 * d_model))),
-        scale=1.0 / 127.0,
+        scale=TF_PROBS_SCALE,
     )
-    ctx = ir.requantize(ir.dense(probs, v), scale=1.0 / 64.0)  # (seq, d) int8
-    attn = proj(ctx, d_model, d_model)
+    ctx = ir.requantize(ir.dense(probs, v), scale=TF_RQ_SCALE)  # (seq, d) int8
+    attn = proj(ctx, "attn")
     h = ir.add(attn, x)
     # FFN with fused quantized ReLU (clip_lo=0) on the expansion layer
-    f = proj(h, d_model, d_ff, clip_lo=0)
-    f = proj(f, d_ff, d_model)
+    f = proj(h, "f1", clip_lo=0)
+    f = proj(f, "f2")
     out = ir.add(f, h)
     return ir.Graph([out], name="transformer_block")
+
+
+def transformer_block_fn(x, params):
+    d_model = x.shape[-1]
+
+    def proj(h, tag, clip_lo=-128):
+        return _qdense_jnp(h, params[f"w_{tag}"], params[f"b_{tag}"],
+                           w_scale=TF_W_SCALE, rq_scale=TF_RQ_SCALE,
+                           clip_lo=clip_lo)
+
+    q = proj(x, "q")
+    k = proj(x, "k")
+    v = proj(x, "v")
+    scores = fnn.dense(q, jnp.transpose(k))
+    probs = fnn.quantize(
+        jax.nn.softmax(fnn.dequantize(scores, 1.0 / (64.0 * d_model))),
+        TF_PROBS_SCALE,
+    )
+    ctx = fnn.requantize(fnn.dense(probs, v), TF_RQ_SCALE)
+    attn = proj(ctx, "attn")
+    h = attn + x
+    f = proj(h, "f1", clip_lo=0)
+    f = proj(f, "f2")
+    return f + h
 
 
 ZOO: dict[str, ZooModel] = {
@@ -181,6 +325,8 @@ ZOO: dict[str, ZooModel] = {
             name="qcnn",
             description="int8 conv+pool+conv+dense CNN (conv via im2col GEMM)",
             build=qcnn_graph,
+            jnp_fn=qcnn_fn,
+            params=qcnn_params,
             input_name="x",
             input_shape=(1, 12, 12, 8),
             input_dtype="int8",
@@ -191,6 +337,8 @@ ZOO: dict[str, ZooModel] = {
             name="toycar_mlp",
             description="MLPerf-Tiny ToyCar autoencoder (paper Table 2)",
             build=lambda: mlp_graph(TOYCAR_LAYERS, name="toycar_mlp"),
+            jnp_fn=make_mlp_fn(TOYCAR_LAYERS),
+            params=lambda: mlp_params(TOYCAR_LAYERS),
             input_name="x",
             input_shape=(1, TOYCAR_LAYERS[0]),
             input_dtype="int8",
@@ -201,6 +349,8 @@ ZOO: dict[str, ZooModel] = {
             name="mlp_tiny",
             description="serving-size MLP; every layer fits one PE tile",
             build=lambda: mlp_graph((16,) * 9, name="mlp_tiny"),
+            jnp_fn=make_mlp_fn((16,) * 9),
+            params=lambda: mlp_params((16,) * 9),
             input_name="x",
             input_shape=(1, 16),
             input_dtype="int8",
@@ -211,6 +361,8 @@ ZOO: dict[str, ZooModel] = {
             name="transformer_block",
             description="quantized single-head transformer encoder block",
             build=transformer_block_graph,
+            jnp_fn=transformer_block_fn,
+            params=transformer_params,
             input_name="x",
             input_shape=(16, 64),
             input_dtype="int8",

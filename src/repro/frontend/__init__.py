@@ -1,0 +1,25 @@
+"""Traced-JAX frontend: plain ``jax.numpy`` callables -> core IR graphs.
+
+    from repro import frontend
+
+    graph = frontend.trace_model(fn, {"x": example_x}, params)
+
+``importer`` walks the jaxpr (direct primitives + idiom raising),
+``nn`` holds the recognized plain-jnp spellings of the quantized idioms.
+"""
+
+from repro.frontend import nn
+from repro.frontend.importer import (
+    SUPPORTED_PRIMITIVES,
+    UnsupportedJaxprError,
+    import_jaxpr,
+    trace_model,
+)
+
+__all__ = [
+    "SUPPORTED_PRIMITIVES",
+    "UnsupportedJaxprError",
+    "import_jaxpr",
+    "nn",
+    "trace_model",
+]

@@ -1,0 +1,72 @@
+"""Plain-jnp spellings of the quantized-NN idioms the frontend recognizes.
+
+These are ordinary ``jax.numpy`` compositions — nothing here is a custom
+primitive — written in exactly the shape the jaxpr importer raises back into
+single IR ops.  Model code is free to inline the same expressions by hand;
+using the helpers just keeps the recognized form in one place:
+
+    quantize(x, s)    = clip(round(x / s), -128, 127).astype(int8)   -> ir.quantize
+    requantize(x, s)  = clip(round(x * s), iinfo range).astype(int8) -> ir.requantize
+    dequantize(x, s)  = x.astype(float32) * s                        -> ir.dequantize
+    max_pool2d(x, k)  = NHWC square reduce_window max                -> ir.max_pool2d
+    dense(x, w)       = matmul with wide int accumulation            -> ir.dense
+    conv2d(x, w)      = NHWC/HWIO conv with wide int accumulation    -> ir.conv2d
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize(x, scale: float, dtype=jnp.int8):
+    """Symmetric quantization: round(x / scale), clipped to [-128, 127]."""
+    return jnp.clip(jnp.round(x / scale), -128, 127).astype(dtype)
+
+
+def requantize(x, scale: float, dtype=jnp.int8):
+    """Requantization: round(x * scale) with a saturating cast to ``dtype``."""
+    info = jnp.iinfo(dtype)
+    return jnp.clip(jnp.round(x * scale), int(info.min), int(info.max)).astype(dtype)
+
+
+def dequantize(x, scale: float):
+    return x.astype(jnp.float32) * scale
+
+
+def max_pool2d(x, size: int = 2, stride: int | None = None):
+    """NHWC max pooling with a square window (no padding)."""
+    stride = size if stride is None else stride
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        init = np.asarray(jnp.iinfo(x.dtype).min, dtype=x.dtype)
+    else:
+        init = np.asarray(-np.inf, dtype=x.dtype)
+    return lax.reduce_window(
+        x,
+        init,
+        lax.max,
+        window_dimensions=(1, size, size, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def dense(x, w):
+    """x[N, C] @ w[C, K]; integer operands accumulate wide (int32), matching
+    ``ir.dense`` / the systolic-array semantics."""
+    preferred = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else None
+    return jnp.matmul(x, w, preferred_element_type=preferred)
+
+
+def conv2d(x, w, stride: int = 1, padding: int = 0):
+    """NHWC conv with HWIO weights; integer operands accumulate to int32."""
+    preferred = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else None
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=preferred,
+    )

@@ -1,7 +1,14 @@
-"""Batched serving driver: prefill + decode over a synthetic request pool.
+"""Batched serving driver: prefill + decode over a synthetic request pool,
+or accelerator-compiled zoo-model serving through the ``repro.compile()``
+front door.
 
+    # LM serving (JAX engine)
     PYTHONPATH=src python -m repro.launch.serve --arch musicgen_medium --smoke \
         --requests 16 --batch 4 --new-tokens 16
+
+    # accelerator serving: compile a zoo model for a target, drive run_many
+    PYTHONPATH=src python -m repro.launch.serve --zoo mlp_tiny \
+        --target gemmini:optimized --requests 256
 """
 
 from __future__ import annotations
@@ -9,23 +16,44 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config, get_smoke_config
-from repro.models import lm
-from repro.serve import ServeConfig, ServingEngine
+
+def serve_zoo(args) -> None:
+    """Serve a model-zoo network on an accelerator target: one
+    ``repro.compile`` call, then ``run_many`` over the request pool."""
+    import repro
+    from repro.core.zoo import get_model
+
+    model = get_model(args.zoo)
+    target = repro.Target.parse(args.target)
+    t0 = time.perf_counter()
+    module = repro.compile(args.zoo, target)
+    t_compile = time.perf_counter() - t0
+
+    traffic = [model.feeds(seed=s) for s in range(args.requests)]
+    t0 = time.perf_counter()
+    outs = module.run_many(traffic)
+    dt = time.perf_counter() - t0
+    cycles = module.modeled_cycles()
+    print(
+        f"[serve] {model.name} on {target.describe()}: compiled in "
+        f"{t_compile * 1e3:.1f} ms, {len(outs)} requests in {dt:.3f}s "
+        f"({len(outs) / dt:.0f} req/s, {dt / len(outs) * 1e6:.1f} us/req)"
+    )
+    print(
+        f"[serve] modeled cycles/request: {cycles['total']:,.0f} "
+        f"(accel {cycles['accel']:,.0f} / host {cycles['host']:,.0f})"
+    )
+    print(f"[serve] sample output: {np.asarray(outs[0][0]).ravel()[:8]}")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    args = ap.parse_args()
+def serve_lm(args) -> None:
+    import jax
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import lm
+    from repro.serve import ServeConfig, ServingEngine
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.frontend:
@@ -56,6 +84,32 @@ def main():
         f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s)"
     )
     print("[serve] sample output:", done[0].output[:16])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="LM architecture to serve (JAX engine)")
+    ap.add_argument("--zoo", help="zoo model to serve on an accelerator target")
+    ap.add_argument(
+        "--target",
+        default="gemmini:optimized",
+        help="accelerator[:mode] for --zoo (Target.parse syntax)",
+    )
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    if bool(args.arch) == bool(args.zoo):
+        raise SystemExit("pass exactly one of --arch (LM) or --zoo (accelerator)")
+    if args.requests < 1:
+        raise SystemExit("--requests must be >= 1")
+    if args.zoo:
+        serve_zoo(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,6 @@ quantized-flag / free-view cycle-model fixes in the pipeline."""
 import numpy as np
 import pytest
 
-import repro
 from repro.core import build_backend, ir
 from repro.core.descriptions import (
     make_edge_npu_description,
@@ -44,7 +43,7 @@ def _backend(acc: str):
 )
 def test_planned_matches_legacy_zoo(model_name, acc, mode):
     model = get_model(model_name)
-    mod = _backend(acc).compile(model.build(), mode=mode)
+    mod = _backend(acc).compile_graph(model.build(), mode=mode)
     feeds = model.feeds(seed=3)
     planned = mod.run(feeds)
     legacy = mod.run(feeds, use_plan=False)
@@ -62,7 +61,7 @@ def test_planned_matches_legacy_tpu_pallas_interpret(mode):
     executor and the per-node interpreter in all three modes."""
     backend = build_backend(make_tpu_v5e_description(), use_pallas=True)
     model = get_model("mlp_tiny")
-    mod = backend.compile(model.build(), mode=mode)
+    mod = backend.compile_graph(model.build(), mode=mode)
     feeds = model.feeds(seed=5)
     planned = mod.run(feeds)
     legacy = mod.run(feeds, use_plan=False)
@@ -74,7 +73,7 @@ def test_planned_matches_legacy_tpu_pallas_interpret(mode):
 
 
 def _tiny_module(mode="proposed"):
-    return _backend("gemmini").compile(mlp_graph((16,) * 3), mode=mode)
+    return _backend("gemmini").compile_graph(mlp_graph((16,) * 3), mode=mode)
 
 
 def test_compile_builds_plan_eagerly():
@@ -130,7 +129,7 @@ def test_plan_handles_none_inputs():
         shape=(4, 8),
         dtype="int32",
     )
-    mod = _backend("gemmini").compile(Graph([node]), mode="proposed")
+    mod = _backend("gemmini").compile_graph(Graph([node]), mode="proposed")
     feeds = {"x": np.ones((4, 8), dtype=np.int8)}
     expected = np.full((4, 8), 8, dtype=np.int32)
     assert np.array_equal(mod.run(feeds)[0], expected)
@@ -156,7 +155,7 @@ def test_inplace_accumulating_intrinsic_stays_correct():
         if intr.kind == "compute":
             intr.fn = inplace_mma
     backend = build_backend(desc)
-    mod = backend.compile(mlp_graph((8, 8, 8)), mode="proposed")
+    mod = backend.compile_graph(mlp_graph((8, 8, 8)), mode="proposed")
     feeds = {"x": np.full((1, 8), 3, dtype=np.int8)}
     r1 = mod.run(feeds)[0].copy()
     for _ in range(3):  # identical feeds must keep producing identical outputs
@@ -205,7 +204,7 @@ def _manual_generalized(attrs):
 def test_quantized_flag_from_node_attrs(acc):
     epi = {"quantized": True, "requant_scale": 0.05, "clip_lo": -128, "clip_hi": 127}
     graph, feeds, expected = _manual_generalized(epi)
-    mod = _backend(acc).compile(graph, mode="proposed")
+    mod = _backend(acc).compile_graph(graph, mode="proposed")
     assert np.array_equal(mod.run(feeds)[0], expected)
     assert np.array_equal(mod.run(feeds, use_plan=False)[0], expected)
 
@@ -216,7 +215,7 @@ def test_quantized_flag_from_strategy_compute(acc):
     ``quantized`` flag used to silently skip the requantize/clip epilogue."""
     epi = {"requant_scale": 0.05, "clip_lo": -128, "clip_hi": 127}  # no flag
     graph, feeds, expected = _manual_generalized(epi)
-    mod = _backend(acc).compile(graph, mode="proposed")
+    mod = _backend(acc).compile_graph(graph, mode="proposed")
     assert np.array_equal(mod.run(feeds)[0], expected)
     assert np.array_equal(mod.run(feeds, use_plan=False)[0], expected)
 
@@ -230,7 +229,7 @@ def test_quantized_missing_epilogue_attrs_is_compile_error():
         "generalized_dense", [x, w, b], {"quantized": True}, shape=(4, 8), dtype="int8"
     )
     with pytest.raises(ValueError, match="missing required epilogue attrs"):
-        _backend("gemmini").compile(Graph([node]), mode="proposed")
+        _backend("gemmini").compile_graph(Graph([node]), mode="proposed")
 
 
 # -- satellite: flatten and reshape are both free views ------------------------
@@ -266,7 +265,7 @@ def test_flatten_node_executes_like_reshape():
     x = ir.input_((2, 4, 8), "int8", name="x")
     n = Node("flatten", [x], {}, shape=(2, 32), dtype="int8")
     feeds = {"x": np.arange(64, dtype=np.int8).reshape(2, 4, 8)}
-    mod = _backend("gemmini").compile(Graph([n]), mode="proposed")
+    mod = _backend("gemmini").compile_graph(Graph([n]), mode="proposed")
     expected = feeds["x"].reshape(2, 32)
     assert np.array_equal(mod.run(feeds)[0], expected)
     assert np.array_equal(mod.run(feeds, use_plan=False)[0], expected)

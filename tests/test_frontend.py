@@ -1,0 +1,205 @@
+"""Traced-JAX frontend: jaxpr import correctness and the zoo parity
+acceptance — every zoo model traced from its plain-jnp form must be
+bit-exact with its hand-built golden graph, with identical modeled cycles,
+in all three modes on gemmini and edge_npu."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro.core import build_backend, ir
+from repro.core.descriptions import (
+    make_edge_npu_description,
+    make_gemmini_description,
+)
+from repro.core.zoo import ZOO, get_model
+from repro.frontend import UnsupportedJaxprError, nn, trace_model
+
+MAKERS = {"gemmini": make_gemmini_description, "edge_npu": make_edge_npu_description}
+_BACKENDS: dict[str, object] = {}
+
+
+def _backend(acc: str):
+    if acc not in _BACKENDS:
+        _BACKENDS[acc] = build_backend(MAKERS[acc]())
+    return _BACKENDS[acc]
+
+
+def _ops(graph: ir.Graph) -> list[str]:
+    return [n.op for n in graph.toposort()]
+
+
+# -- zoo parity (the acceptance criterion) ------------------------------------
+
+
+@pytest.mark.parametrize("model_name", sorted(ZOO))
+def test_traced_graph_matches_golden_structure(model_name):
+    model = get_model(model_name)
+    assert _ops(model.trace()) == _ops(model.build())
+
+
+@pytest.mark.parametrize("mode", ["naive", "baseline", "optimized"])
+@pytest.mark.parametrize(
+    "model_name,acc",
+    [(m.name, a) for m in ZOO.values() for a in m.accelerators if a in MAKERS],
+)
+def test_traced_zoo_parity(model_name, acc, mode):
+    """Traced-from-jnp vs hand-built golden graph: bit-exact outputs and
+    identical modeled cycles through the full compile pipeline."""
+    model = get_model(model_name)
+    backend = _backend(acc)
+    golden = backend.compile_graph(model.build(), mode=mode)
+    traced = backend.compile_graph(model.trace(), mode=mode)
+    feeds = model.feeds(seed=7)
+    for t, g in zip(traced.run(feeds), golden.run(feeds)):
+        assert np.array_equal(t, g), f"{model_name}/{acc}/{mode} diverges"
+    assert traced.modeled_cycles() == golden.modeled_cycles()
+
+
+# -- idiom recognition --------------------------------------------------------
+
+
+def test_quantize_requantize_dequantize_scales_exact():
+    def fn(x):
+        q = nn.quantize(x, 0.0625)
+        r = nn.requantize(nn.dense(q, q), 0.015625)
+        return nn.dequantize(r, 0.25)
+
+    g = trace_model(fn, {"x": np.zeros((4, 4), np.float32)})
+    by_op = {n.op: n for n in g.toposort()}
+    assert _ops(g) == ["input", "quantize", "dense", "requantize", "dequantize"]
+    assert by_op["quantize"].attrs["scale"] == 0.0625
+    assert by_op["requantize"].attrs["scale"] == 0.015625
+    assert by_op["dequantize"].attrs["scale"] == 0.25
+    assert by_op["dense"].dtype == "int32"
+
+
+def test_relu_named_call_and_maximum_idiom():
+    g1 = trace_model(jax.nn.relu, {"x": np.zeros((3,), np.float32)})
+    g2 = trace_model(
+        lambda x: jnp.maximum(x, 0.0), {"x": np.zeros((3,), np.float32)}
+    )
+    assert _ops(g1) == ["input", "relu"]
+    assert _ops(g2) == ["input", "relu"]
+
+
+def test_gelu_tanh_chain_recognized():
+    g = trace_model(jax.nn.gelu, {"x": np.zeros((2, 3), np.float32)})
+    assert _ops(g) == ["input", "gelu"]
+
+
+def test_softmax_chain_recognized_with_axis():
+    g = trace_model(jax.nn.softmax, {"x": np.zeros((2, 5), np.float32)})
+    assert _ops(g) == ["input", "softmax"]
+    assert g.outputs[0].attrs["axis"] == -1
+
+
+def test_clip_on_tensor_becomes_clip_node():
+    g = trace_model(
+        lambda x: jnp.clip(x, 0, 127), {"x": np.zeros((4,), np.int8)}
+    )
+    (out,) = g.outputs
+    assert out.op == "clip" and out.attrs == {"lo": 0, "hi": 127}
+
+
+def test_bias_broadcast_becomes_bias_add_but_residual_stays_add():
+    def fn(x, params):
+        h = nn.dense(x, params["w"]) + params["b"]  # (N,K) + (K,) -> bias_add
+        return h + h  # same-shape add stays add
+
+    g = trace_model(
+        fn,
+        {"x": np.zeros((2, 4), np.int8)},
+        {"w": np.zeros((4, 4), np.int8), "b": np.zeros((4,), np.int32)},
+    )
+    assert _ops(g) == ["input", "const", "dense", "const", "bias_add", "add"]
+
+
+def test_conv_pool_flatten_attrs():
+    def fn(x, params):
+        h = nn.conv2d(x, params["w"], stride=2, padding=1)
+        h = nn.max_pool2d(h, size=2)
+        return jnp.reshape(h, (x.shape[0], -1))
+
+    g = trace_model(
+        fn,
+        {"x": np.zeros((1, 8, 8, 3), np.int8)},
+        {"w": np.zeros((3, 3, 3, 4), np.int8)},
+    )
+    conv = next(n for n in g.toposort() if n.op == "conv2d")
+    pool = next(n for n in g.toposort() if n.op == "max_pool2d")
+    assert conv.attrs == {"stride": 2, "padding": 1}
+    assert pool.attrs == {"size": 2, "stride": 2}
+    assert g.outputs[0].op == "reshape"
+
+
+def test_transposed_matmul_keeps_layout_op_for_fold_pass():
+    g = trace_model(
+        lambda q, k: jnp.matmul(q, k.T, preferred_element_type=jnp.int32),
+        {"q": np.zeros((4, 8), np.int8), "k": np.zeros((4, 8), np.int8)},
+    )
+    assert _ops(g) == ["input", "input", "transpose", "dense"]
+
+
+def test_closure_constants_captured():
+    w = np.arange(12, dtype=np.float32).reshape(4, 3)
+
+    def fn(x):
+        return nn.dense(x, w)
+
+    g = trace_model(fn, {"x": np.zeros((2, 4), np.float32)})
+    consts = [n for n in g.toposort() if n.op == "const"]
+    assert len(consts) == 1 and np.array_equal(consts[0].value, w)
+
+
+def test_semantic_equivalence_on_float_model():
+    """For a float model with no rounding-sensitive idioms, the imported
+    graph's reference execution matches jax's own evaluation."""
+    w = np.random.default_rng(0).normal(size=(8, 4)).astype(np.float32)
+    b = np.random.default_rng(1).normal(size=(4,)).astype(np.float32)
+
+    def fn(x, params):
+        return jax.nn.relu(nn.dense(x, params["w"]) + params["b"])
+
+    x = np.random.default_rng(2).normal(size=(3, 8)).astype(np.float32)
+    g = trace_model(fn, {"x": x}, {"w": w, "b": b})
+    got = ir.execute_graph(g, {"x": x})[0]
+    want = np.asarray(fn(jnp.asarray(x), {"w": w, "b": b}))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+# -- error reporting ----------------------------------------------------------
+
+
+def test_unsupported_primitives_all_listed():
+    def bad(x):
+        return jnp.sin(x) + jnp.cos(x) * jnp.sqrt(x)
+
+    with pytest.raises(UnsupportedJaxprError) as exc:
+        trace_model(bad, {"x": np.ones((2,), np.float32)})
+    msg = "\n".join(exc.value.problems)
+    assert "sin" in msg and "cos" in msg and "sqrt" in msg
+
+
+def test_callable_without_example_inputs_is_rejected():
+    with pytest.raises(ValueError, match="example_inputs"):
+        repro.compile(lambda x: x, target="gemmini")
+
+
+# -- the front door over the tracer ------------------------------------------
+
+
+def test_compile_callable_end_to_end():
+    model = get_model("mlp_tiny")
+    mod = repro.compile(
+        model.jnp_fn,
+        target="gemmini:optimized",
+        example_inputs=model.example_inputs(),
+        params=model.params(),
+    )
+    feeds = model.feeds(seed=5)
+    ref = ir.execute_graph(model.build(), feeds)[0]
+    assert np.array_equal(mod.run(feeds)[0], ref)

@@ -65,7 +65,7 @@ def test_naive_mode_is_partition_only():
 
 
 def test_compile_attaches_pass_report():
-    mod = BACKEND.compile(_qdense_graph(), mode="proposed")
+    mod = BACKEND.compile_graph(_qdense_graph(), mode="proposed")
     assert mod.pass_report is not None
     assert mod.pass_report.rewrites_by_pass()["legalize"] == 1
     assert mod.pass_report.mode == "proposed"
@@ -84,7 +84,7 @@ def test_cse_merges_duplicate_subexpressions():
     feeds = {"x": rng.integers(-128, 128, (2, 16)).astype(np.int8)}
     ref = ir.execute_graph(Graph([ir.add(ir.dense(x, w1), ir.dense(x, w2))]), feeds)[0]
 
-    mod = BACKEND.compile(g, mode="proposed")
+    mod = BACKEND.compile_graph(g, mode="proposed")
     assert mod.pass_report.rewrites_by_pass()["cse"] >= 2  # const + dense
     denses = [n for n in mod.graph.toposort() if n.op == "dense"]
     assert len(denses) == 1  # one shared GEMM, scheduled once
@@ -101,7 +101,7 @@ def test_dce_removes_no_effect_nodes():
     feeds = {"x": np.random.default_rng(0).integers(-128, 128, (2, 16)).astype(np.int8)}
     ref = np.maximum(feeds["x"], 0)
 
-    mod = BACKEND.compile(g, mode="proposed")
+    mod = BACKEND.compile_graph(g, mode="proposed")
     assert mod.pass_report.rewrites_by_pass()["dce"] == 3
     assert [n.op for n in mod.graph.toposort()] == ["input", "relu"]
     assert np.array_equal(mod.run(feeds)[0], ref)
@@ -110,7 +110,7 @@ def test_dce_removes_no_effect_nodes():
 def test_dce_keeps_effective_clip_and_transpose():
     x = ir.input_((2, 16), "int8", name="x")
     g = Graph([ir.clip(ir.transpose(x, (1, 0)), lo=0, hi=127)])
-    mod = BACKEND.compile(g, mode="proposed")
+    mod = BACKEND.compile_graph(g, mode="proposed")
     assert mod.pass_report.rewrites_by_pass()["dce"] == 0
     ops = [n.op for n in mod.graph.toposort()]
     assert "transpose" in ops and "clip" in ops
@@ -183,7 +183,7 @@ def test_pass_trace_env(monkeypatch, capsys):
 def _cycles(model_name, mode, optimize):
     model = get_model(model_name)
     passes = None if optimize else frontend_passes(DESC, optimize=False)
-    mod = BACKEND.compile(model.build(), mode=mode, passes=passes)
+    mod = BACKEND.compile_graph(model.build(), mode=mode, passes=passes)
     return mod.modeled_cycles()["total"], mod
 
 
@@ -216,7 +216,7 @@ def test_optimized_pipeline_stays_bit_exact_vs_unoptimized():
 def test_custom_pass_list_override():
     """compile(passes=...) replaces the mode pipeline (here: nothing runs,
     so nothing is partitioned and the graph stays host-only)."""
-    mod = BACKEND.compile(_qdense_graph(), mode="proposed", passes=[])
+    mod = BACKEND.compile_graph(_qdense_graph(), mode="proposed", passes=[])
     assert mod.pass_report.passes == []
     assert not mod.ops
     feeds = {"x": np.random.default_rng(1).integers(-128, 128, (4, 32)).astype(np.int8)}

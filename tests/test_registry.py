@@ -59,14 +59,14 @@ def test_validation_rejects_undersized_buffer():
     levels[1] = dataclasses.replace(levels[1], size_bytes=100)  # < 3 PE tiles
     desc.arch = dataclasses.replace(desc.arch, levels=tuple(levels))
     with pytest.raises(IntegrationError, match="PE tile per buffered operand"):
-        repro.integrate(desc)
+        repro.build_integrated_backend(desc)
 
 
 def test_integrate_validation_errors():
     desc = make_gemmini_description()
     desc.intrinsics.clear()
     with pytest.raises(IntegrationError) as exc:
-        repro.integrate(desc)
+        repro.build_integrated_backend(desc)
     msgs = "\n".join(exc.value.problems)
     assert "no compute intrinsic" in msgs
     assert "no memory intrinsics" in msgs
@@ -78,7 +78,7 @@ def test_integrate_rejects_missing_tile_limits():
         if intr.kind == "compute":
             intr.tile_limits = None
     with pytest.raises(IntegrationError, match="tile_limits"):
-        repro.integrate(desc)
+        repro.build_integrated_backend(desc)
 
 
 def test_os_only_accelerator_works_in_proposed_mode():
@@ -91,11 +91,11 @@ def test_os_only_accelerator_works_in_proposed_mode():
 
     desc = make_edge_npu_description()
     desc.arch = dataclasses.replace(desc.arch, dataflows=(OUTPUT_STATIONARY,))
-    backend = repro.integrate(desc, cache=False)
-    mod = backend.compile(_conv_dense_graph(), mode="proposed")
+    backend = repro.build_integrated_backend(desc, cache=False)
+    mod = backend.compile_graph(_conv_dense_graph(), mode="proposed")
     assert np.array_equal(mod.run({"x": X})[0], REF)
     with pytest.raises(ValueError, match="no 'WS' dataflow"):
-        backend.compile(_conv_dense_graph(), mode="c_toolchain")
+        backend.compile_graph(_conv_dense_graph(), mode="c_toolchain")
 
 
 # -- edge_npu end-to-end (the proof-of-abstraction) ---------------------------
@@ -103,8 +103,8 @@ def test_os_only_accelerator_works_in_proposed_mode():
 
 @pytest.mark.parametrize("mode", ["proposed", "c_toolchain", "naive"])
 def test_edge_npu_three_modes_bit_exact(mode):
-    backend = repro.integrate("edge_npu", cache=False)
-    mod = backend.compile(_conv_dense_graph(), mode=mode)
+    backend = repro.build_integrated_backend("edge_npu", cache=False)
+    mod = backend.compile_graph(_conv_dense_graph(), mode=mode)
     out = mod.run({"x": X})[0]
     assert np.array_equal(out, REF)
     cycles = mod.modeled_cycles()
@@ -112,9 +112,9 @@ def test_edge_npu_three_modes_bit_exact(mode):
 
 
 def test_edge_npu_cycle_model_ordering():
-    backend = repro.integrate("edge_npu", cache=False)
+    backend = repro.build_integrated_backend("edge_npu", cache=False)
     cycles = {
-        mode: backend.compile(_conv_dense_graph(), mode=mode).modeled_cycles()["total"]
+        mode: backend.compile_graph(_conv_dense_graph(), mode=mode).modeled_cycles()["total"]
         for mode in ("proposed", "c_toolchain", "naive")
     }
     assert cycles["proposed"] <= 1.2 * cycles["c_toolchain"]
@@ -125,7 +125,7 @@ def test_edge_npu_cycle_model_ordering():
 
 
 def test_schedule_result_roundtrip():
-    backend = repro.integrate("edge_npu", cache=False)
+    backend = repro.build_integrated_backend("edge_npu", cache=False)
     wl = GemmWorkload(N=96, C=72, K=24, in_bytes=1, w_bytes=1, out_bytes=4, name="rt")
     result = backend.scheduler.schedule(wl)
     back = result_from_dict(result_to_dict(result))
@@ -137,16 +137,16 @@ def test_schedule_result_roundtrip():
 
 def test_cache_warm_compile_zero_dse_sweeps(tmp_path):
     # cold: fresh backend + empty cache -> DSE runs, entries persisted
-    cold = repro.integrate("edge_npu", cache_dir=tmp_path)
-    mod = cold.compile(_conv_dense_graph(), mode="proposed")
+    cold = repro.build_integrated_backend("edge_npu", cache_dir=tmp_path)
+    mod = cold.compile_graph(_conv_dense_graph(), mode="proposed")
     assert np.array_equal(mod.run({"x": X})[0], REF)
     assert cold.scheduler.n_solver_calls > 0
     assert cold.schedule_cache.stats.misses > 0
     assert cold.schedule_cache.file.exists()
 
     # warm: FRESH backend, FRESH process-equivalent state -> zero DSE sweeps
-    warm = repro.integrate("edge_npu", cache_dir=tmp_path)
-    mod2 = warm.compile(_conv_dense_graph(), mode="proposed")
+    warm = repro.build_integrated_backend("edge_npu", cache_dir=tmp_path)
+    mod2 = warm.compile_graph(_conv_dense_graph(), mode="proposed")
     assert np.array_equal(mod2.run({"x": X})[0], REF)
     assert warm.scheduler.n_solver_calls == 0
     assert warm.schedule_cache.stats.hits >= 2  # conv + dense
@@ -168,7 +168,7 @@ def test_cache_key_separates_modes_and_arch(tmp_path):
 
 
 def test_cache_concurrent_writers_merge(tmp_path):
-    backend = repro.integrate("edge_npu", cache=False)
+    backend = repro.build_integrated_backend("edge_npu", cache=False)
     wl_a = GemmWorkload(N=16, C=8, K=8, name="a")
     wl_b = GemmWorkload(N=24, C=8, K=8, name="b")
     ra = backend.scheduler.schedule(wl_a)
@@ -189,7 +189,7 @@ def test_cache_concurrent_writers_merge(tmp_path):
 
 
 def test_cache_clear_empties_disk_tier(tmp_path):
-    backend = repro.integrate("edge_npu", cache=False)
+    backend = repro.build_integrated_backend("edge_npu", cache=False)
     r = backend.scheduler.schedule(GemmWorkload(N=16, C=8, K=8, name="c"))
     cache = ScheduleCache(tmp_path)
     cache.put("k", r)
@@ -201,9 +201,9 @@ def test_cache_clear_empties_disk_tier(tmp_path):
 
 
 def test_cache_unwritable_location_degrades_to_memory():
-    backend = repro.integrate("edge_npu", cache_dir="/proc/no_such_dir/cache")
+    backend = repro.build_integrated_backend("edge_npu", cache_dir="/proc/no_such_dir/cache")
     with pytest.warns(RuntimeWarning, match="not persistable"):
-        mod = backend.compile(_conv_dense_graph(), mode="proposed")
+        mod = backend.compile_graph(_conv_dense_graph(), mode="proposed")
     assert np.array_equal(mod.run({"x": X})[0], REF)  # compile never fails
     assert backend.schedule_cache.path is None  # degraded to memory tier
     assert len(backend.schedule_cache) == 2
@@ -218,13 +218,13 @@ def test_cache_survives_corrupt_file(tmp_path):
 
 
 def test_cache_modes_all_cached(tmp_path):
-    backend = repro.integrate("edge_npu", cache_dir=tmp_path)
+    backend = repro.build_integrated_backend("edge_npu", cache_dir=tmp_path)
     for mode in ("proposed", "c_toolchain", "naive"):
-        backend.compile(_conv_dense_graph(), mode=mode)
+        backend.compile_graph(_conv_dense_graph(), mode=mode)
     assert backend.schedule_cache.stats.puts == 6  # 2 gemm nodes x 3 modes
-    warm = repro.integrate("edge_npu", cache_dir=tmp_path)
+    warm = repro.build_integrated_backend("edge_npu", cache_dir=tmp_path)
     for mode in ("proposed", "c_toolchain", "naive"):
-        mod = warm.compile(_conv_dense_graph(), mode=mode)
+        mod = warm.compile_graph(_conv_dense_graph(), mode=mode)
         assert np.array_equal(mod.run({"x": X})[0], REF)
     assert warm.scheduler.n_solver_calls == 0
     assert warm.schedule_cache.stats.misses == 0
@@ -235,8 +235,8 @@ def test_cache_modes_all_cached(tmp_path):
 
 def test_parallel_dse_matches_serial():
     wl = GemmWorkload(N=96, C=72, K=24, in_bytes=1, w_bytes=1, out_bytes=4)
-    serial = repro.integrate("edge_npu", cache=False).scheduler
-    parallel = repro.integrate("edge_npu", cache=False, parallel_dse=True).scheduler
+    serial = repro.build_integrated_backend("edge_npu", cache=False).scheduler
+    parallel = repro.build_integrated_backend("edge_npu", cache=False, parallel_dse=True).scheduler
     assert parallel.parallel
     rs = serial.schedule(wl)
     rp = parallel.schedule(wl)
@@ -245,13 +245,34 @@ def test_parallel_dse_matches_serial():
     assert rs.n_candidates == rp.n_candidates
 
 
+# -- legacy two-step wrappers (deprecated, kept working) -----------------------
+# These tests exercise the deprecated surface on purpose, so they opt out of
+# the repo-wide "ReproDeprecationWarning is an error" filter explicitly.
+
+
+@pytest.mark.filterwarnings("default::repro.core.deprecation.ReproDeprecationWarning")
+def test_legacy_integrate_warns_but_works():
+    with pytest.warns(repro.ReproDeprecationWarning, match="repro.compile"):
+        backend = repro.integrate("edge_npu", cache=False)
+    mod = backend.compile_graph(_conv_dense_graph(), mode="proposed")
+    assert np.array_equal(mod.run({"x": X})[0], REF)
+
+
+@pytest.mark.filterwarnings("default::repro.core.deprecation.ReproDeprecationWarning")
+def test_legacy_backend_compile_warns_but_works():
+    backend = repro.build_integrated_backend("edge_npu", cache=False)
+    with pytest.warns(repro.ReproDeprecationWarning, match="repro.compile"):
+        mod = backend.compile(_conv_dense_graph(), mode="proposed")
+    assert np.array_equal(mod.run({"x": X})[0], REF)
+
+
 # -- acceptance: integrate() by name needs no compiler-internal edits ----------
 
 
 def test_integrate_by_name_and_by_description_agree():
-    by_name = repro.integrate("edge_npu", cache=False)
-    by_desc = repro.integrate(make_edge_npu_description(), cache=False)
+    by_name = repro.build_integrated_backend("edge_npu", cache=False)
+    by_desc = repro.build_integrated_backend(make_edge_npu_description(), cache=False)
     assert by_name.desc.fingerprint() == by_desc.desc.fingerprint()
-    m1 = by_name.compile(_conv_dense_graph(), mode="proposed")
-    m2 = by_desc.compile(_conv_dense_graph(), mode="proposed")
+    m1 = by_name.compile_graph(_conv_dense_graph(), mode="proposed")
+    m2 = by_desc.compile_graph(_conv_dense_graph(), mode="proposed")
     assert np.array_equal(m1.run({"x": X})[0], m2.run({"x": X})[0])

@@ -315,7 +315,7 @@ def test_description_contributed_pattern():
     )[0]
 
     backend = build_backend(desc)
-    mod = backend.compile(graph, mode="proposed")
+    mod = backend.compile_graph(graph, mode="proposed")
     assert mod.pass_report.rewrites_by_pass().get("target_patterns") == 1
     gen = [n for n in mod.graph.toposort() if n.op == "generalized_dense"]
     assert gen and gen[0].attrs["quantized"] is True
@@ -353,14 +353,14 @@ def test_multi_output_graph_compiles_and_runs():
     ref = ir.execute_graph(build(), feeds)
     backend = build_backend(make_gemmini_description())
     for mode in ("proposed", "c_toolchain", "naive"):
-        mod = backend.compile(build(), mode=mode)
+        mod = backend.compile_graph(build(), mode=mode)
         planned = mod.run(feeds)
         legacy = mod.run(feeds, use_plan=False)
         assert len(planned) == 2
         for p, leg, r in zip(planned, legacy, ref):
             assert np.array_equal(p, leg) and np.array_equal(p, r), mode
     # in optimized modes both chains legalized even though h1 is an output
-    mod_opt = backend.compile(build(), mode="proposed")
+    mod_opt = backend.compile_graph(build(), mode="proposed")
     gens = [n for n in mod_opt.graph.toposort() if n.op == "generalized_dense"]
     assert len(gens) == 2
     assert mod_opt.graph.outputs[0] is gens[0]

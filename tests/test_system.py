@@ -30,14 +30,14 @@ REF = ir.execute_graph(_qdense_graph(), {"x": X})[0]
 @pytest.mark.parametrize("mode", ["proposed", "c_toolchain", "naive"])
 def test_backend_modes_bit_exact(make_desc, mode):
     backend = build_backend(make_desc())
-    mod = backend.compile(_qdense_graph(), mode=mode)
+    mod = backend.compile_graph(_qdense_graph(), mode=mode)
     out = mod.run({"x": X})[0]
     assert np.array_equal(out, REF)
 
 
 def test_tpu_backend_pallas_interpret_path():
     backend = build_backend(make_tpu_v5e_description(), use_pallas=True)
-    mod = backend.compile(_qdense_graph(), mode="proposed")
+    mod = backend.compile_graph(_qdense_graph(), mode="proposed")
     out = mod.run({"x": X})[0]
     assert np.array_equal(out, REF)
 
@@ -47,12 +47,12 @@ def test_cycle_model_ordering():
     backend = build_backend(make_gemmini_description())
     cycles = {}
     for mode in ("proposed", "c_toolchain", "naive"):
-        mod = backend.compile(_qdense_graph(), mode=mode)
+        mod = backend.compile_graph(_qdense_graph(), mode=mode)
         cycles[mode] = mod.modeled_cycles()["total"]
     assert cycles["proposed"] <= 1.2 * cycles["c_toolchain"]
     assert cycles["naive"] > 3 * cycles["c_toolchain"]
     # the naive gap comes from host-side work (unfolded preprocessing)
-    mod_naive = backend.compile(_qdense_graph(), mode="naive")
+    mod_naive = backend.compile_graph(_qdense_graph(), mode="naive")
     c = mod_naive.modeled_cycles()
     assert c["host"] > 0.5 * c["total"]
 
@@ -109,7 +109,7 @@ def test_conv2d_end_to_end_quantized():
     ref = ir.execute_graph(graph(), {"x": xv})[0]
     backend = build_backend(make_gemmini_description())
     for mode in ("proposed", "c_toolchain"):
-        mod = backend.compile(graph(), mode=mode)
+        mod = backend.compile_graph(graph(), mode=mode)
         got = mod.run({"x": xv})[0]
         assert np.array_equal(got, ref), mode
         gen = [n for n in mod.graph.toposort() if n.op == "generalized_conv2d"]

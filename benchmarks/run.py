@@ -13,6 +13,7 @@ def main() -> None:
         integration_bench,
         kernels_bench,
         roofline,
+        serving_bench,
         table1_loc,
         table2_bench,
         table2_latency,
@@ -53,6 +54,18 @@ def main() -> None:
             (time.perf_counter() - t0) * 1e6,
             f"cells={len(zoo['rows'])};"
             f"best_run_many_speedup={zoo['summary']['best_run_many_speedup']:.2f}x",
+        )
+    )
+
+    # -- serving: batched plans vs per-sample loop ----------------------------
+    t0 = time.perf_counter()
+    serving = serving_bench.main(["--smoke"])
+    csv_rows.append(
+        (
+            "serving_batched_vs_loop",
+            (time.perf_counter() - t0) * 1e6,
+            f"cells={len(serving['rows'])};"
+            f"best_speedup={serving['summary']['best_speedup_req_s']:.2f}x",
         )
     )
 

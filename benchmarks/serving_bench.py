@@ -1,0 +1,202 @@
+"""Serving-path benchmark: batched ExecutionPlans vs the per-sample loop.
+
+For every (zoo model, accelerator) pair this harness serves the same
+request pool two ways and reports req/s plus p50/p99 latency:
+
+  * **loop** — the PR-2 serving path: one single-sample compiled module,
+    ``run_many`` as a Python-level loop over per-sample planned executions;
+  * **batched** — the batch-aware path: one ``BatchedModule`` with bucketed
+    plans, ``run_many`` packing requests into padded bucket executions so a
+    16-request burst is one GEMM sweep with batch folded into M.
+
+Functional correctness gates the timing: batched outputs must be bit-exact
+with the loop path for every request (padding never leaks into results).
+
+Results land in ``BENCH_serving.json``.  ``--smoke`` runs mlp_tiny/gemmini
+with a small pool (CI); the full run sweeps the zoo x {gemmini, edge_npu}
+and asserts the batched path reaches >= 2x req/s on mlp_tiny/gemmini.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import numpy as np
+
+import repro
+from repro.core.zoo import get_model, model_names
+
+BUCKETS = (1, 4, 16)
+ACCELERATORS = ("gemmini", "edge_npu")
+SMOKE_MODELS = ("mlp_tiny",)
+SMOKE_ACCELERATORS = ("gemmini",)
+
+
+def _percentiles(samples: list[float]) -> dict[str, float]:
+    arr = np.asarray(samples)
+    return {
+        "p50_us": float(np.percentile(arr, 50)) * 1e6,
+        "p99_us": float(np.percentile(arr, 99)) * 1e6,
+    }
+
+
+def _time_loop(module, traffic, reps: int) -> dict:
+    """The PR-2 path: per-request planned executions in a Python loop."""
+    best_dt = float("inf")
+    latencies: list[float] = []
+    for _ in range(reps):
+        lat: list[float] = []
+        t0 = time.perf_counter()
+        for feeds in traffic:
+            t1 = time.perf_counter()
+            module.run(feeds)
+            lat.append(time.perf_counter() - t1)
+        dt = time.perf_counter() - t0
+        if dt < best_dt:
+            best_dt, latencies = dt, lat
+    best_dt = max(best_dt, 1e-9)
+    return {
+        "req_s": len(traffic) / best_dt,
+        "total_s": best_dt,
+        **_percentiles(latencies),
+    }
+
+
+def _time_batched(module, traffic, reps: int) -> dict:
+    """Bucketed dispatch; each request's latency is its chunk's wall time
+    (the requests of one chunk complete together)."""
+    from repro.core.batching import plan_chunks
+
+    chunks = []
+    i = 0
+    for size in plan_chunks(module.bucket_sizes(), len(traffic)):
+        chunks.append(traffic[i : i + size])
+        i += size
+    best_dt = float("inf")
+    latencies: list[float] = []
+    for _ in range(reps):
+        lat: list[float] = []
+        t0 = time.perf_counter()
+        for chunk in chunks:
+            t1 = time.perf_counter()
+            module.run_many(chunk)
+            lat.extend([time.perf_counter() - t1] * len(chunk))
+        dt = time.perf_counter() - t0
+        if dt < best_dt:
+            best_dt, latencies = dt, lat
+    best_dt = max(best_dt, 1e-9)
+    return {
+        "req_s": len(traffic) / best_dt,
+        "total_s": best_dt,
+        **_percentiles(latencies),
+    }
+
+
+def bench_cell(model_name: str, acc: str, *, smoke: bool) -> dict:
+    model = get_model(model_name)
+    target = repro.Target(acc, mode="optimized", cache=False)
+    loop_mod = repro.compile(model_name, target)
+    batched_mod = repro.compile(
+        model_name, target, options=repro.CompileOptions(batch_buckets=BUCKETS)
+    )
+
+    n_requests = 32 if smoke else 128
+    n_requests += 3  # never a bucket multiple: the padded tail is always hit
+    traffic = [model.feeds(seed=s) for s in range(n_requests)]
+
+    # -- correctness gate: batched == loop for every request ----------------
+    loop_outs = loop_mod.run_many(traffic)  # also warms the loop plan
+    batched_outs = batched_mod.run_many(traffic)  # warms every bucket
+    for i, (lo, bo) in enumerate(zip(loop_outs, batched_outs)):
+        for a, b in zip(lo, bo):
+            assert np.array_equal(a, b), (
+                f"{model_name}/{acc}: batched output diverges from the "
+                f"per-sample loop at request {i} (padding leaked?)"
+            )
+
+    reps = 2 if smoke else 5
+    loop = _time_loop(loop_mod, traffic, reps)
+    batched = _time_batched(batched_mod, traffic, reps)
+    cycles_1 = loop_mod.modeled_cycles()["total"]
+    cycles_b = batched_mod.modeled_cycles()["total"] / batched_mod.bucket_sizes()[-1]
+    return {
+        "model": model_name,
+        "accelerator": acc,
+        "n_requests": n_requests,
+        "buckets": list(batched_mod.bucket_sizes()),
+        "loop": loop,
+        "batched": batched,
+        "speedup_req_s": batched["req_s"] / max(loop["req_s"], 1e-9),
+        "modeled_cycles_per_request": {"loop": cycles_1, "batched": cycles_b},
+    }
+
+
+def run(models: list[str], accelerators: tuple[str, ...], *, smoke: bool,
+        out: Path) -> dict:
+    rows = []
+    for name in models:
+        model = get_model(name)
+        for acc in accelerators:
+            if acc not in model.accelerators:
+                continue
+            row = bench_cell(name, acc, smoke=smoke)
+            rows.append(row)
+            print(
+                f"{row['model']:>18} {row['accelerator']:>8} "
+                f"loop={row['loop']['req_s']:>9.0f} req/s "
+                f"batched={row['batched']['req_s']:>9.0f} req/s "
+                f"({row['speedup_req_s']:>5.2f}x) "
+                f"p99 {row['loop']['p99_us']:>8.1f} -> "
+                f"{row['batched']['p99_us']:>8.1f} us"
+            )
+    best = max(rows, key=lambda r: r["speedup_req_s"])
+    payload = {
+        "bench": "serving_batched_vs_loop",
+        "smoke": smoke,
+        "host": platform.machine(),
+        "rows": rows,
+        "summary": {
+            "best_speedup_req_s": best["speedup_req_s"],
+            "best_cell": (best["model"], best["accelerator"]),
+        },
+    }
+    out.write_text(json.dumps(payload, indent=2))
+    print(
+        f"\nwrote {out} ({len(rows)} cells); best batched speedup "
+        f"{best['speedup_req_s']:.2f}x on {best['model']}/{best['accelerator']}"
+    )
+
+    # -- serving claim: batching must buy real throughput -------------------
+    anchor = next(
+        (r for r in rows if (r["model"], r["accelerator"]) == ("mlp_tiny", "gemmini")),
+        None,
+    )
+    if anchor is not None and not smoke:
+        assert anchor["speedup_req_s"] >= 2.0, (
+            f"batched run_many must beat the per-sample loop by >= 2x req/s "
+            f"on mlp_tiny/gemmini (got {anchor['speedup_req_s']:.2f}x)"
+        )
+    return payload
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="mlp_tiny/gemmini with a small pool (CI)")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help=f"zoo models (default: all; available: {model_names()})")
+    ap.add_argument("--out", type=Path, default=Path("BENCH_serving.json"))
+    args = ap.parse_args(argv)
+    models = args.models or list(SMOKE_MODELS if args.smoke else model_names())
+    accelerators = SMOKE_ACCELERATORS if args.smoke else ACCELERATORS
+    for m in models:
+        get_model(m)  # fail fast on typos
+    return run(models, accelerators, smoke=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ works but emits ``ReproDeprecationWarning``.  See
 """
 
 from repro.api import (
+    DEFAULT_BATCH_BUCKETS,
     CapabilityError,
     CompileOptions,
     Target,
@@ -40,6 +41,7 @@ from repro.api import (
 )
 from repro.core.accel import AcceleratorDescription
 from repro.core.arch_spec import ArchSpec, GemmWorkload, conv2d_as_gemm
+from repro.core.batching import BatchedModule
 from repro.core.deprecation import ReproDeprecationWarning
 from repro.core.executor import FeedError
 from repro.core.registry import (
@@ -60,8 +62,10 @@ __all__ = [
     "AcceleratorDescription",
     "AcceleratorRegistry",
     "ArchSpec",
+    "BatchedModule",
     "CapabilityError",
     "CompileOptions",
+    "DEFAULT_BATCH_BUCKETS",
     "FeedError",
     "GemmWorkload",
     "IntegrationError",

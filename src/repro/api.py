@@ -31,14 +31,23 @@ keeps working but is deprecated; it maps 1:1 onto this surface.
 
 from __future__ import annotations
 
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass, replace
 from pathlib import Path
 
+import numpy as np
+
 from repro.core.accel import AcceleratorDescription
+from repro.core.batching import BatchedModule, io_specs_from_graph
 from repro.core.ir import Graph
 from repro.core.pass_manager import PassContext
 from repro.core.pipeline import PUBLIC_MODES, CompilerBackend, resolve_mode
 from repro.core.registry import REGISTRY, build_integrated_backend
+
+#: serving bucket ladder used when only ``Target.batch_size`` is given:
+#: the buckets are the ladder entries below it, plus the batch itself.
+DEFAULT_BATCH_BUCKETS = (1, 4, 16)
 
 
 class TargetError(ValueError):
@@ -81,9 +90,18 @@ class Target:
     cache: bool = True
     cache_dir: str | Path | None = None
     parallel_dse: bool = False
+    #: serving batch the deployment dispatches at.  ``batch_size > 1``
+    #: makes ``compile()`` return a :class:`BatchedModule` bucketed at the
+    #: DEFAULT_BATCH_BUCKETS entries up to (and including) this size;
+    #: ``CompileOptions.batch_buckets`` overrides the bucket set exactly.
+    batch_size: int = 1
 
     def __post_init__(self):
         problems = []
+        if not isinstance(self.batch_size, int) or self.batch_size < 1:
+            problems.append(
+                f"batch_size must be a positive int, got {self.batch_size!r}"
+            )
         try:
             resolve_mode(self.mode)
         except ValueError:
@@ -158,20 +176,34 @@ class CompileOptions:
     #: True -> build a fresh backend instead of reusing the per-target one
     #: (benchmarking cold integration, isolating solver-call counters)
     fresh_backend: bool = False
+    #: serving batch buckets: compile one ExecutionPlan per bucket and
+    #: return a BatchedModule whose run_many packs/pads per-sample feeds
+    #: into the smallest fitting bucket.  Only zoo names and traced
+    #: callables can be rebuilt per bucket (a prebuilt ir.Graph is
+    #: fixed-shape).  None (default) -> the classic single-shape module
+    #: unless ``Target.batch_size > 1`` supplies the default ladder.
+    batch_buckets: tuple[int, ...] | None = None
 
 
 # one backend per (accelerator fingerprint, backend options): repeated
 # compiles share the scheduler's in-memory memo on top of the persistent
 # schedule cache, so sweeping modes/models never repeats a DSE sweep.
-# Bounded FIFO so long-lived processes sweeping many descriptions or
-# throwaway cache dirs cannot grow memory monotonically.
-_BACKENDS: dict[tuple, CompilerBackend] = {}
+# Bounded locked LRU (move-to-end on hit, evict the least recently used)
+# so long-lived serving processes sweeping many descriptions or throwaway
+# cache dirs cannot grow memory monotonically, and hot targets are never
+# the ones evicted.  Concurrent compile() callers are safe: lookups,
+# insertion, and eviction all happen under the lock, and two threads
+# racing to build the same backend converge on whichever one published
+# first (so they share its scheduler memo).
+_BACKENDS: OrderedDict[tuple, CompilerBackend] = OrderedDict()
 _BACKENDS_MAX = 16
+_BACKENDS_LOCK = threading.Lock()
 
 
 def clear_backend_cache() -> None:
     """Drop every memoized backend (fresh schedulers on the next compile)."""
-    _BACKENDS.clear()
+    with _BACKENDS_LOCK:
+        _BACKENDS.clear()
 
 
 def backend_for(target: Target, *, fresh: bool = False) -> CompilerBackend:
@@ -191,8 +223,12 @@ def backend_for(target: Target, *, fresh: bool = False) -> CompilerBackend:
         str(target.cache_dir),
         target.parallel_dse,
     )
-    if not fresh and key in _BACKENDS:
-        return _BACKENDS[key]
+    if not fresh:
+        with _BACKENDS_LOCK:
+            cached = _BACKENDS.get(key)
+            if cached is not None:
+                _BACKENDS.move_to_end(key)
+                return cached
     backend = build_integrated_backend(
         desc,
         use_mip=target.use_mip,
@@ -202,10 +238,39 @@ def backend_for(target: Target, *, fresh: bool = False) -> CompilerBackend:
         parallel_dse=target.parallel_dse,
     )
     if not fresh:
-        while len(_BACKENDS) >= _BACKENDS_MAX:
-            _BACKENDS.pop(next(iter(_BACKENDS)))
-        _BACKENDS[key] = backend
+        with _BACKENDS_LOCK:
+            winner = _BACKENDS.get(key)
+            if winner is not None:
+                # lost a build race: share the published backend (and its
+                # scheduler memo) instead of forking the cache
+                _BACKENDS.move_to_end(key)
+                return winner
+            while len(_BACKENDS) >= _BACKENDS_MAX:
+                _BACKENDS.popitem(last=False)
+            _BACKENDS[key] = backend
     return backend
+
+
+def _check_zoo_args(example_inputs, params) -> None:
+    if example_inputs is not None or params is not None:
+        raise ValueError(
+            "zoo models carry their own inputs and parameters; "
+            "drop example_inputs/params"
+        )
+
+
+def _check_callable_args(model, example_inputs) -> None:
+    if not callable(model):
+        raise TypeError(
+            f"model must be an ir.Graph, a zoo model name, or a jax.numpy "
+            f"callable; got {type(model).__name__}"
+        )
+    if not isinstance(example_inputs, dict) or not example_inputs:
+        raise ValueError(
+            "compiling a traced callable needs example_inputs: a dict "
+            "mapping input names to example arrays, e.g. "
+            "repro.compile(fn, target, example_inputs={'x': x})"
+        )
 
 
 def _graph_for(model, example_inputs, params) -> Graph:
@@ -219,26 +284,75 @@ def _graph_for(model, example_inputs, params) -> Graph:
     if isinstance(model, str):
         from repro.core.zoo import get_model
 
-        if example_inputs is not None or params is not None:
-            raise ValueError(
-                "zoo models carry their own inputs and parameters; "
-                "drop example_inputs/params"
-            )
+        _check_zoo_args(example_inputs, params)
         return get_model(model).trace()
-    if callable(model):
-        if not isinstance(example_inputs, dict) or not example_inputs:
-            raise ValueError(
-                "compiling a traced callable needs example_inputs: a dict "
-                "mapping input names to example arrays, e.g. "
-                "repro.compile(fn, target, example_inputs={'x': x})"
-            )
-        from repro.frontend import trace_model
+    _check_callable_args(model, example_inputs)
+    from repro.frontend import trace_model
 
-        return trace_model(model, example_inputs, params)
-    raise TypeError(
-        f"model must be an ir.Graph, a zoo model name, or a jax.numpy "
-        f"callable; got {type(model).__name__}"
-    )
+    return trace_model(model, example_inputs, params)
+
+
+def _resolve_buckets(target: Target, options: CompileOptions) -> tuple[int, ...] | None:
+    """The bucket set to compile, or None for the classic unbatched path."""
+    buckets = options.batch_buckets
+    if buckets is None:
+        if target.batch_size <= 1:
+            return None
+        buckets = tuple(
+            b for b in DEFAULT_BATCH_BUCKETS if b < target.batch_size
+        ) + (target.batch_size,)
+    buckets = tuple(buckets)
+    problems = [
+        f"bucket {b!r} must be a positive int"
+        for b in buckets
+        if not isinstance(b, int) or b < 1
+    ]
+    if not buckets:
+        problems.append("batch_buckets must name at least one bucket")
+    if problems:
+        raise ValueError(
+            "invalid batch buckets:\n  - " + "\n  - ".join(problems)
+        )
+    return tuple(sorted(set(buckets)))
+
+
+def _batched_graph_builder(model, example_inputs, params):
+    """A ``build(batch) -> Graph`` callback for models that can be rebuilt
+    per bucket: zoo names re-trace their batched form, callables re-trace
+    with batch-widened example inputs.  Prebuilt graphs are fixed-shape."""
+    if isinstance(model, str):
+        from repro.core.zoo import get_model
+
+        _check_zoo_args(example_inputs, params)
+        zoo_model = get_model(model)
+        # the hand-built twin is the cheap per-sample reference: it is
+        # pinned bit-exact to trace() with identical input/output shapes
+        # and names by tests/test_frontend.py, and only the IO specs are
+        # read from it
+        return zoo_model.build(), lambda b: zoo_model.trace(batch=b)
+    if isinstance(model, Graph):
+        raise ValueError(
+            "batch buckets need a model that can be rebuilt per bucket "
+            "(a zoo name or a traced callable); a prebuilt ir.Graph is "
+            "fixed-shape — trace the model instead, or compile the graph "
+            "without batch_buckets"
+        )
+    _check_callable_args(model, example_inputs)
+    from repro.core.batching import batched_shape
+    from repro.frontend import trace_model
+
+    def widen(arr: np.ndarray, b: int) -> np.ndarray:
+        return np.zeros(batched_shape(arr.shape, b), dtype=arr.dtype)
+
+    sample = {k: np.asarray(v) for k, v in example_inputs.items()}
+    reference = trace_model(model, sample, params)
+
+    def build(b: int) -> Graph:
+        return trace_model(
+            model, {k: widen(v, b) for k, v in sample.items()}, params
+        )
+
+    return reference, build
 
 
 def _check_offload(module) -> None:
@@ -278,18 +392,42 @@ def compile(
 
     Returns a ``CompiledModule``: ``run(feeds)`` / ``run_many(feeds_list)``
     execute it, ``modeled_cycles()`` reads the cycle model.
+
+    With ``Target(batch_size=...)`` > 1 or ``CompileOptions(batch_buckets=
+    ...)``, returns a ``BatchedModule`` instead: one ExecutionPlan per batch
+    bucket, ``run_many`` packing per-sample feeds into padded bucketed
+    executions (see ``repro.core.batching``).
     """
     if isinstance(target, str):
         target = Target.parse(target)
     options = options or CompileOptions()
-    graph = _graph_for(model, example_inputs, params)
+    # validate the model argument (and trace/resolve its graphs) BEFORE
+    # touching the backend: a bad model must never trigger accelerator
+    # integration or cache-dir side effects
+    buckets = _resolve_buckets(target, options)
+    if buckets is None:
+        graph = _graph_for(model, example_inputs, params)
+    else:
+        reference, build = _batched_graph_builder(model, example_inputs, params)
     backend = backend_for(target, fresh=options.fresh_backend)
-    module = backend.compile_graph(
-        graph,
-        mode=target.internal_mode,
-        passes=options.passes,
-        pass_context=options.pass_context,
+
+    def compile_graph(graph):
+        module = backend.compile_graph(
+            graph,
+            mode=target.internal_mode,
+            passes=options.passes,
+            pass_context=options.pass_context,
+        )
+        if not options.allow_host_fallback:
+            _check_offload(module)
+        return module
+
+    if buckets is None:
+        return compile_graph(graph)
+
+    inputs, outputs = io_specs_from_graph(reference)
+    return BatchedModule(
+        modules={b: compile_graph(build(b)) for b in buckets},
+        inputs=inputs,
+        outputs=outputs,
     )
-    if not options.allow_host_fallback:
-        _check_offload(module)
-    return module

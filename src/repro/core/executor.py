@@ -9,6 +9,7 @@ without a backend: ``build_plan(graph, {})`` lowers any host-only graph.
 from __future__ import annotations
 
 import math
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -17,7 +18,7 @@ import numpy as np
 from repro.core.accel import AcceleratorDescription
 from repro.core.ir import Graph, Node, execute_node, gelu_ref, max_pool2d_ref
 from repro.core.simulator import simulate
-from repro.core.strategy import Strategy, dtype_bytes
+from repro.core.strategy import Strategy, dtype_bytes, gemm_instances
 
 # Zero-copy view ops: free in the cycle model (no data movement, the host
 # just reinterprets the buffer).  One canonical set so the cycle model and
@@ -238,7 +239,14 @@ class CompiledModule:
     #: the CompilerBackend that produced this module (None for
     #: hand-assembled modules); exposes scheduler/cache introspection.
     backend: Any = field(default=None, repr=False)
-    _arena: list | None = field(default=None, repr=False)
+    # arena pool: each in-flight call owns one arena, returned when done.
+    # Steady-state single-threaded traffic reuses one arena (no per-call
+    # allocation); N concurrent callers grow the pool to at most N, so the
+    # module is thread- and reentrancy-safe to share across serving threads.
+    _arena_pool: list = field(default_factory=list, repr=False)
+    _arena_lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False
+    )
     _feed_names: frozenset | None = field(default=None, repr=False)
 
     # -- input signature / feed validation ----------------------------------
@@ -282,39 +290,62 @@ class CompiledModule:
 
     # -- execution ---------------------------------------------------------
     def finalize(self) -> "ExecutionPlan":
-        """Build (or return) the execution plan and its reusable arena."""
+        """Build (or return) the execution plan.  Double-checked under the
+        arena lock: compile() finalizes eagerly, but a hand-assembled
+        module shared cold across threads must build exactly one plan."""
         if self.plan is None:
-            self.plan = build_plan(self.graph, self.ops)
-        if self._arena is None:
-            self._arena = self.plan.new_arena()
+            with self._arena_lock:
+                if self.plan is None:
+                    self.plan = build_plan(self.graph, self.ops)
         return self.plan
+
+    def _acquire_arena(self, plan: "ExecutionPlan") -> list:
+        with self._arena_lock:
+            if self._arena_pool:
+                return self._arena_pool.pop()
+        return plan.new_arena()
+
+    def _release_arena(self, arena: list) -> None:
+        with self._arena_lock:
+            if len(self._arena_pool) < 16:
+                self._arena_pool.append(arena)
 
     def run(
         self, feeds: dict[str, np.ndarray], *, use_plan: bool = True
     ) -> list[np.ndarray]:
-        """Execute the module.  ``use_plan=False`` runs the legacy per-node
-        interpreter (kept for planned-vs-interpreted equivalence testing and
-        as the baseline of ``benchmarks/table2_bench.py``)."""
+        """Execute the module.  Thread-safe: every call runs over its own
+        buffer arena (pooled, so steady-state traffic allocates nothing).
+        ``use_plan=False`` runs the legacy per-node interpreter (kept for
+        planned-vs-interpreted equivalence testing and as the baseline of
+        ``benchmarks/table2_bench.py``)."""
         self._check_feeds(feeds)
         if not use_plan:
             return self._run_interpreted(feeds)
         plan = self.finalize()
-        return plan.execute(feeds, self._arena)
+        arena = self._acquire_arena(plan)
+        try:
+            return plan.execute(feeds, arena)
+        finally:
+            self._release_arena(arena)
 
     def run_many(
         self, feeds_list: list[dict[str, np.ndarray]], *, use_plan: bool = True
     ) -> list[list[np.ndarray]]:
         """Repeated invocation over a list of feeds (serving-style traffic);
-        the plan and buffer arena are built once and reused for every call.
-        Not thread-safe: concurrent callers must hold their own module."""
+        the plan is built once and one pooled arena is held for the whole
+        loop.  Thread-safe: concurrent callers each hold their own arena,
+        so compiled modules can be shared across serving threads."""
         for feeds in feeds_list:
             self._check_feeds(feeds)
         if not use_plan:
             return [self._run_interpreted(f) for f in feeds_list]
         plan = self.finalize()
-        arena = self._arena
-        execute = plan.execute
-        return [execute(feeds, arena) for feeds in feeds_list]
+        arena = self._acquire_arena(plan)
+        try:
+            execute = plan.execute
+            return [execute(feeds, arena) for feeds in feeds_list]
+        finally:
+            self._release_arena(arena)
 
     def _run_interpreted(self, feeds: dict[str, np.ndarray]) -> list[np.ndarray]:
         """The pre-plan per-node interpreter: re-toposorts and re-dispatches
@@ -348,7 +379,10 @@ class CompiledModule:
                     folded_preprocessing=True,  # graph structure carries it
                     fused_loop_instructions=fused,
                 )
-                accel += rep.total_cycles
+                # batched matmuls replay the scheduled per-sample GEMM once
+                # per batch instance; everything else folds batch into M
+                # and is already covered by the schedule itself.
+                accel += rep.total_cycles * gemm_instances(n)
             elif n.op in _LAYOUT_OPS and n.op not in FREE_VIEW_OPS:
                 nbytes = math.prod(n.shape) * dtype_bytes(n.dtype)
                 host += nbytes * arch.host_preproc_cycles_per_byte

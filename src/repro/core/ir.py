@@ -189,10 +189,26 @@ def _binary_shape(a: Node, b: Node) -> tuple[int, ...]:
 
 
 def dense(x: Node, w: Node, **attrs) -> Node:
-    """QNN/fp dense: x[N, C] @ w[C, K] (weights already in (C, K) layout)."""
+    """QNN/fp dense: x[..., C] @ w[C, K] (weights already in (C, K) layout).
+
+    A 3-D ``w`` is the *batched* activation-activation matmul (attention
+    scores/context with a leading batch dim): ``x[B, M, C] @ w[B, C, K]``.
+    Weight-operand denses instead fold every leading dim of ``x`` into the
+    GEMM M dimension, so a batched input IS the batched GEMM.
+    """
+    out_dtype = attrs.pop("out_dtype", "int32" if x.dtype.startswith("int") else x.dtype)
+    if len(w.shape) == 3:
+        if len(x.shape) != 3 or x.shape[0] != w.shape[0] or x.shape[-1] != w.shape[-2]:
+            raise ValueError(f"batched dense shape mismatch {x.shape} @ {w.shape}")
+        return Node(
+            "dense",
+            [x, w],
+            attrs,
+            shape=(x.shape[0], x.shape[1], w.shape[-1]),
+            dtype=out_dtype,
+        )
     if x.shape[-1] != w.shape[0]:
         raise ValueError(f"dense shape mismatch {x.shape} @ {w.shape}")
-    out_dtype = attrs.pop("out_dtype", "int32" if x.dtype.startswith("int") else x.dtype)
     return Node(
         "dense",
         [x, w],

@@ -28,6 +28,7 @@ Epilogue attribute contract on generalized ops (set by the passes):
 
 from __future__ import annotations
 
+import threading
 from typing import Callable
 
 import numpy as np
@@ -102,6 +103,10 @@ def _make_gemmini_executor(
     intrinsic_gen.tensorize_check(strategy.compute.tag, strategy.schedule)
     tiled = mapping_gen.to_tiled_executor(strategy.schedule, intr)
     is_conv = node.op.endswith("conv2d")
+    # batched activation-activation matmul: both operands carry a leading
+    # batch dim (attention scores/context).  The schedule covers the
+    # per-sample GEMM; the executor replays it per batch instance.
+    is_bmm = not is_conv and len(node.inputs[1].shape) == 3
     transpose_b = bool(attrs.get("transpose_b")) and not is_conv
     stride = attrs.get("stride", 1)
     padding = attrs.get("padding", 0)
@@ -185,10 +190,14 @@ def _make_gemmini_executor(
             kh, kw, ci, co = w.shape
             x2 = _im2col(x, kh, kw, ci)
             w2 = w.reshape(kh * kw * ci, co)
+            acc = tiled(x2, w2)
+        elif is_bmm:
+            wb = w.swapaxes(-2, -1) if transpose_b else w
+            acc = np.stack([tiled(xs, ws) for xs, ws in zip(x, wb)])
         else:
             x2 = x.reshape(-1, x.shape[-1])
             w2 = w.T if transpose_b else w
-        acc = tiled(x2, w2)
+            acc = tiled(x2, w2)
         if bias is not None:
             acc = acc + np.asarray(bias).astype(np.int64)
         out = _epilogue(acc)
@@ -209,7 +218,8 @@ def _make_gemmini_executor(
         (zero-padding contributes exact zeros to integer accumulation); the
         per-node interpreter cannot do any of this because it re-reads the
         graph each run."""
-        if 1 not in consts:
+        if is_bmm or 1 not in consts:
+            # batched-matmul weights are activations; nothing to pre-pad
             return None
         w = np.asarray(consts[1])
         if is_conv:
@@ -265,13 +275,19 @@ def _make_gemmini_executor(
             # preallocated requantize scratch (shapes are static per
             # node); the arena value is always the fresh array the final
             # astype produces, so scratch reuse can never alias results.
-            fbuf = np.empty(acc_shape, dtype=np.float64)
+            # The scratch is THREAD-LOCAL: compiled modules are shared
+            # across serving threads, and a process-wide buffer would let
+            # two concurrent calls requantize into each other.
+            scratch = threading.local()
             clip_lo_, clip_hi_ = attrs["clip_lo"], attrs["clip_hi"]
             scale_ = attrs["requant_scale"]
 
             def _epilogue_planned(acc):
                 if acc.shape != acc_shape:
                     return _epilogue(acc)
+                fbuf = getattr(scratch, "fbuf", None)
+                if fbuf is None:
+                    fbuf = scratch.fbuf = np.empty(acc_shape, dtype=np.float64)
                 np.multiply(acc, scale_, out=fbuf)
                 np.rint(fbuf, out=fbuf)
                 fbuf.clip(clip_lo_, clip_hi_, out=fbuf)
@@ -329,6 +345,11 @@ def _make_tpu_executor(
         raise NotImplementedError(
             "fused pooling epilogues are not lowered on the TPU path "
             "(conv2d has no Pallas kernel lowering)"
+        )
+    if len(node.inputs[1].shape) == 3:
+        raise NotImplementedError(
+            "batched activation-activation matmuls are not lowered on the "
+            "TPU path (no batched Pallas GEMM kernel)"
         )
     transpose_b = bool(attrs.get("transpose_b"))
     epilogue = {

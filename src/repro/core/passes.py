@@ -160,13 +160,16 @@ def _fold_transpose_transpose(m: Match, graph: Graph) -> Node | None:
 def _fold_transpose_into_dense(m: Match, graph: Graph) -> Node | None:
     """dense(x, transpose(w)) -> dense(x, w, transpose_b=True): the mapped
     executor reads the weight operand transposed (a free view on the host
-    targets) instead of materializing a layout op.  Constant transposes are
+    targets) instead of materializing a layout op.  Applies to the 2-D
+    weight transpose and to the batched matmul's last-two-dims transpose
+    (attention K^T with a leading batch dim).  Constant transposes are
     left alone — constant folding removes them entirely at compile time,
     which is strictly better than re-reading them transposed per run."""
     w, t, root = m["w"], m["t"], m.root
-    if w is None or w.is_const() or len(w.shape) != 2:
+    if w is None or w.is_const() or len(w.shape) not in (2, 3):
         return None
-    if t.attrs["perm"] != (1, 0) or root.attrs.get("transpose_b"):
+    swap_last_two = (1, 0) if len(w.shape) == 2 else (0, 2, 1)
+    if t.attrs["perm"] != swap_last_two or root.attrs.get("transpose_b"):
         return None
     return Node(
         "dense",

@@ -36,11 +36,35 @@ def dtype_bytes(dtype: str) -> int:
     return _DTYPE_BYTES.get(dtype, 4)
 
 
+def gemm_instances(node: Node) -> int:
+    """How many independent GEMM instances the node executes per call.
+
+    1 for everything except the batched activation-activation matmul
+    (3-D weight operand), whose leading dims are block-diagonal batch
+    instances that cannot fold into M — the executor replays the scheduled
+    per-sample GEMM once per instance, and the cycle model charges it as
+    many times."""
+    base = node.op.replace("generalized_", "")
+    if base == "dense" and len(node.inputs[1].shape) == 3:
+        return node.inputs[0].shape[0]
+    return 1
+
+
 def workload_from_node(node: Node) -> GemmWorkload:
-    """Extract the GEMM workload of a (generalized) dense/conv node."""
+    """Extract the GEMM workload of a (generalized) dense/conv node.
+
+    Weight-operand denses fold every leading input dim (the serving batch
+    included) into the GEMM M dimension, so the scheduler sees the batched
+    shape as ONE workload.  Batched matmuls (3-D weight) schedule the
+    per-sample GEMM; see ``gemm_instances``."""
     x, w = node.inputs[0], node.inputs[1]
     base = node.op.replace("generalized_", "")
-    if base == "dense":
+    if base == "dense" and len(w.shape) == 3:
+        # batched matmul: x[B, M, C] @ w[B, C, K]
+        n_dim = x.shape[-2]
+        c_dim = x.shape[-1]
+        k_dim = w.shape[-2] if node.attrs.get("transpose_b") else w.shape[-1]
+    elif base == "dense":
         n_dim = math.prod(x.shape[:-1])
         c_dim = x.shape[-1]
         # a folded layout transpose (transpose_b) means the 2-D weight

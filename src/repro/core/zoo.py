@@ -66,8 +66,10 @@ TF_PROBS_SCALE = 1.0 / 128.0
 class ZooModel:
     name: str
     description: str
-    build: Callable[[], ir.Graph]
-    #: plain jax.numpy twin of ``build`` — ``fn(x, params)``
+    #: graph builder; ``build(batch=b)`` builds the model with a leading
+    #: batch dim of ``b`` (``batch=None`` is the per-sample golden form)
+    build: Callable[..., ir.Graph]
+    #: plain jax.numpy twin of ``build`` — ``fn(x, params)``, batch-agnostic
     jnp_fn: Callable
     #: parameter builder shared by both forms
     params: Callable[[], dict]
@@ -83,18 +85,29 @@ class ZooModel:
         x = rng.integers(-128, 128, size=self.input_shape)
         return {self.input_name: x.astype(self.input_dtype)}
 
-    def example_inputs(self) -> dict[str, np.ndarray]:
-        return {
-            self.input_name: np.zeros(self.input_shape, dtype=self.input_dtype)
-        }
+    def batched_input_shape(self, batch: int) -> tuple[int, ...]:
+        """The input shape at serving batch ``batch``: a leading unit dim
+        is widened in place (MLP/CNN style), otherwise a new leading batch
+        dim is prepended (the 2-D transformer block becomes rank 3) — the
+        one convention in ``repro.core.batching.batched_shape``."""
+        from repro.core.batching import batched_shape
 
-    def trace(self) -> ir.Graph:
+        return batched_shape(self.input_shape, batch)
+
+    def example_inputs(self, batch: int | None = None) -> dict[str, np.ndarray]:
+        shape = (
+            self.input_shape if batch is None else self.batched_input_shape(batch)
+        )
+        return {self.input_name: np.zeros(shape, dtype=self.input_dtype)}
+
+    def trace(self, batch: int | None = None) -> ir.Graph:
         """Build the model through the traced-JAX frontend (the path
-        ``repro.compile("<name>", ...)`` takes)."""
+        ``repro.compile("<name>", ...)`` takes); ``batch`` traces the
+        batched form for one serving bucket."""
         from repro.frontend import trace_model
 
         return trace_model(
-            self.jnp_fn, self.example_inputs(), self.params(), name=self.name
+            self.jnp_fn, self.example_inputs(batch), self.params(), name=self.name
         )
 
 
@@ -152,10 +165,14 @@ def mlp_params(layers=TOYCAR_LAYERS, seed: int = 0) -> dict[str, np.ndarray]:
     return params
 
 
-def mlp_graph(layers=TOYCAR_LAYERS, seed: int = 0, name: str = "mlp") -> ir.Graph:
-    """Quantized MLP: each layer dense -> bias_add -> requantize -> clip."""
+def mlp_graph(
+    layers=TOYCAR_LAYERS, seed: int = 0, name: str = "mlp",
+    batch: int | None = None,
+) -> ir.Graph:
+    """Quantized MLP: each layer dense -> bias_add -> requantize -> clip.
+    ``batch`` widens the leading input dim (the GEMMs fold it into M)."""
     params = mlp_params(layers, seed)
-    x = ir.input_((1, layers[0]), "int8", name="x")
+    x = ir.input_((batch or 1, layers[0]), "int8", name="x")
     h = x
     for i in range(len(layers) - 1):
         h = _qdense(h, params[f"w{i}"], params[f"b{i}"],
@@ -193,14 +210,15 @@ def qcnn_params(seed: int = 0) -> dict[str, np.ndarray]:
     }
 
 
-def qcnn_graph(seed: int = 0) -> ir.Graph:
+def qcnn_graph(seed: int = 0, batch: int | None = None) -> ir.Graph:
     """int8 CNN: conv(3x3, 8->16) -> max_pool(2x2) -> conv(3x3, 16->16) ->
     flatten -> dense(144->32) -> dense(32->10); quantized op chains
     throughout.  The pool rides directly on the first conv's quantized
     chain, so the ``fuse_conv_pool`` pass folds it into the generalized
-    conv's epilogue (the naive BYOC mode pays for it on the host)."""
+    conv's epilogue (the naive BYOC mode pays for it on the host).
+    ``batch`` widens the leading NHWC dim (im2col folds it into GEMM M)."""
     p = qcnn_params(seed)
-    x = ir.input_((1, 12, 12, 8), "int8", name="x")
+    x = ir.input_((batch or 1, 12, 12, 8), "int8", name="x")
     h = _qconv(x, p["conv0_w"], p["conv0_b"], rq_scale=QCNN_CONV_RQ[0])
     h = ir.max_pool2d(h, size=2, stride=2)  # (1, 5, 5, 16)
     h = _qconv(h, p["conv1_w"], p["conv1_b"], rq_scale=QCNN_CONV_RQ[1])
@@ -256,7 +274,9 @@ def transformer_params(seed: int = 0) -> dict[str, np.ndarray]:
     return params
 
 
-def transformer_block_graph(seed: int = 0, seq: int = 16) -> ir.Graph:
+def transformer_block_graph(
+    seed: int = 0, seq: int = 16, batch: int | None = None
+) -> ir.Graph:
     """Quantized single-head transformer encoder block.
 
     d_model / d_ff come from the musicgen smoke config in ``repro.configs``
@@ -265,10 +285,15 @@ def transformer_block_graph(seed: int = 0, seq: int = 16) -> ir.Graph:
     raw int8 dense ops — scheduled on the accelerator but with their
     epilogues (dequantize/softmax/quantize) on the host, which is exactly
     the structure BYOC partitioning produces for attention.
+
+    ``batch`` prepends a leading batch dim: the weight-operand projections
+    fold it into the GEMM M dimension, while the attention GEMMs become
+    batched matmuls (one per-sample GEMM instance per request).
     """
     d_model, _ = _transformer_dims()
     p = transformer_params(seed)
-    x = ir.input_((seq, d_model), "int8", name="x")
+    shape = (seq, d_model) if batch is None else (batch, seq, d_model)
+    x = ir.input_(shape, "int8", name="x")
 
     def proj(h, tag, clip_lo=-128):
         return _qdense(h, p[f"w_{tag}"], p[f"b_{tag}"],
@@ -279,7 +304,8 @@ def transformer_block_graph(seed: int = 0, seq: int = 16) -> ir.Graph:
     k = proj(x, "k")
     v = proj(x, "v")
     # attention: int8 scores GEMM, softmax on the host in float
-    scores = ir.dense(q, ir.transpose(k, (1, 0)))  # (seq, seq) int32
+    swap_last_two = (1, 0) if batch is None else (0, 2, 1)
+    scores = ir.dense(q, ir.transpose(k, swap_last_two))  # (.., seq, seq) int32
     probs = ir.quantize(
         ir.softmax(ir.dequantize(scores, scale=1.0 / (64.0 * d_model))),
         scale=TF_PROBS_SCALE,
@@ -305,7 +331,9 @@ def transformer_block_fn(x, params):
     q = proj(x, "q")
     k = proj(x, "k")
     v = proj(x, "v")
-    scores = fnn.dense(q, jnp.transpose(k))
+    # batch-agnostic K^T: swap the last two dims whatever the rank
+    kt = jnp.transpose(k) if x.ndim == 2 else jnp.transpose(k, (0, 2, 1))
+    scores = fnn.dense(q, kt)
     probs = fnn.quantize(
         jax.nn.softmax(fnn.dequantize(scores, 1.0 / (64.0 * d_model))),
         TF_PROBS_SCALE,
@@ -336,7 +364,9 @@ ZOO: dict[str, ZooModel] = {
         ZooModel(
             name="toycar_mlp",
             description="MLPerf-Tiny ToyCar autoencoder (paper Table 2)",
-            build=lambda: mlp_graph(TOYCAR_LAYERS, name="toycar_mlp"),
+            build=lambda batch=None: mlp_graph(
+                TOYCAR_LAYERS, name="toycar_mlp", batch=batch
+            ),
             jnp_fn=make_mlp_fn(TOYCAR_LAYERS),
             params=lambda: mlp_params(TOYCAR_LAYERS),
             input_name="x",
@@ -348,7 +378,9 @@ ZOO: dict[str, ZooModel] = {
         ZooModel(
             name="mlp_tiny",
             description="serving-size MLP; every layer fits one PE tile",
-            build=lambda: mlp_graph((16,) * 9, name="mlp_tiny"),
+            build=lambda batch=None: mlp_graph(
+                (16,) * 9, name="mlp_tiny", batch=batch
+            ),
             jnp_fn=make_mlp_fn((16,) * 9),
             params=lambda: mlp_params((16,) * 9),
             input_name="x",

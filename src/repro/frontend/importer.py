@@ -46,10 +46,11 @@ except ImportError:  # pragma: no cover
 #: jax primitive -> IR construct it lowers to (drives the docs table and the
 #: "supported ops" introspection; idiom chains are keyed by their sink).
 SUPPORTED_PRIMITIVES: dict[str, str] = {
-    "dot_general": "dense",
+    "dot_general": "dense (leading dims fold into M; 1 batch dim -> batched matmul)",
     "conv_general_dilated": "conv2d",
     "transpose": "transpose",
     "reshape": "reshape / flatten",
+    "squeeze": "reshape (unit dims drop as a free view)",
     "reduce_window_max": "max_pool2d",
     "add": "add / bias_add (broadcast bias idiom)",
     "sub": "sub",
@@ -359,6 +360,10 @@ class _Importer:
             if eqn.params.get("dimensions") is not None:
                 raise ValueError("reshape with explicit dimension order")
             return [ir.reshape(self.realize(args[0]), tuple(eqn.params["new_sizes"]))]
+        if prim == "squeeze":
+            # dropping unit dims is a zero-copy view: the IR spelling is a
+            # free reshape to the squeezed shape
+            return [ir.reshape(self.realize(args[0]), shape)]
         if prim == "reduce_window_max":
             return [self.max_pool(eqn, args)]
         if prim == "add":
@@ -432,11 +437,24 @@ class _Importer:
     def dot_general(self, eqn, args) -> ir.Node:
         (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
         x, w = (self.realize(a) for a in args)
+        out_dtype = str(eqn.outvars[0].aval.dtype)
+        if (
+            tuple(lb) == tuple(rb) == (0,)
+            and len(x.shape) == len(w.shape) == 3
+            and tuple(lc) == (2,)
+            and tuple(rc) == (1,)
+        ):
+            # batched activation-activation matmul (one leading batch dim):
+            # jnp.matmul((B, M, C), (B, C, K)) — attention scores/context
+            return ir.dense(x, w, out_dtype=out_dtype)
         if lb or rb or len(w.shape) != 2:
-            raise ValueError("only 2-D weight matmul without batch dims")
+            raise ValueError(
+                "only 2-D weight matmuls and single-batch-dim batched "
+                "matmuls are supported"
+            )
         if tuple(lc) != (len(x.shape) - 1,) or tuple(rc) != (0,):
             raise ValueError(f"contraction {eqn.params['dimension_numbers']}")
-        return ir.dense(x, w, out_dtype=str(eqn.outvars[0].aval.dtype))
+        return ir.dense(x, w, out_dtype=out_dtype)
 
     def conv(self, eqn, args) -> ir.Node:
         p = eqn.params

@@ -53,9 +53,17 @@ def max_pool2d(x, size: int = 2, stride: int | None = None):
 
 
 def dense(x, w):
-    """x[N, C] @ w[C, K]; integer operands accumulate wide (int32), matching
-    ``ir.dense`` / the systolic-array semantics."""
+    """x[..., C] @ w[C, K]; integer operands accumulate wide (int32),
+    matching ``ir.dense`` / the systolic-array semantics.  A 3-D ``w`` is
+    the batched activation-activation matmul ``x[B, M, C] @ w[B, C, K]``,
+    spelled as an explicit batched ``dot_general`` because ``jnp.matmul``
+    specializes a unit batch dim into a squeeze/transpose chain the
+    importer does not recognize."""
     preferred = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else None
+    if x.ndim == 3 and w.ndim == 3:
+        return lax.dot_general(
+            x, w, (((2,), (1,)), ((0,), (0,))), preferred_element_type=preferred
+        )
     return jnp.matmul(x, w, preferred_element_type=preferred)
 
 

@@ -1,14 +1,14 @@
 """Batched serving driver: prefill + decode over a synthetic request pool,
 or accelerator-compiled zoo-model serving through the ``repro.compile()``
-front door.
+front door with a micro-batching request queue.
 
     # LM serving (JAX engine)
     PYTHONPATH=src python -m repro.launch.serve --arch musicgen_medium --smoke \
         --requests 16 --batch 4 --new-tokens 16
 
-    # accelerator serving: compile a zoo model for a target, drive run_many
+    # accelerator serving: batched ExecutionPlans + micro-batched dispatch
     PYTHONPATH=src python -m repro.launch.serve --zoo mlp_tiny \
-        --target gemmini:optimized --requests 256
+        --target gemmini:optimized --requests 256 --batch 16
 """
 
 from __future__ import annotations
@@ -19,33 +19,73 @@ import time
 import numpy as np
 
 
+def _percentile(samples: list[float], pct: float) -> float:
+    return float(np.percentile(np.asarray(samples), pct)) if samples else 0.0
+
+
 def serve_zoo(args) -> None:
-    """Serve a model-zoo network on an accelerator target: one
-    ``repro.compile`` call, then ``run_many`` over the request pool."""
+    """Serve a model-zoo network on an accelerator target: ONE batched
+    ``repro.compile`` call (one ExecutionPlan per batch bucket), then a
+    micro-batching queue that collects up to ``--batch`` requests (or a
+    deadline) and dispatches each batch as one bucketed execution."""
     import repro
     from repro.core.zoo import get_model
+    from repro.serve import MicroBatcher
 
     model = get_model(args.zoo)
-    target = repro.Target.parse(args.target)
+    target = repro.Target.parse(args.target, batch_size=args.batch)
+    # batch_size=1 compiles the classic single-shape module; the serving
+    # loop always wants the batched surface, so pin an explicit unit bucket
+    options = (
+        repro.CompileOptions(batch_buckets=(1,)) if args.batch <= 1 else None
+    )
     t0 = time.perf_counter()
-    module = repro.compile(args.zoo, target)
+    module = repro.compile(args.zoo, target, options=options)
     t_compile = time.perf_counter() - t0
+    buckets = module.bucket_sizes()
+
+    # warmup: run every bucket once (full chunks, so each bucket's plan,
+    # arena, and executor scratch are touched) — the measured window never
+    # pays first-call costs, and a fast target with few requests cannot
+    # end up timing an empty window
+    for b in buckets:
+        module.run_many([model.feeds(seed=0)] * b)
 
     traffic = [model.feeds(seed=s) for s in range(args.requests)]
+    latencies: list[float] = []
     t0 = time.perf_counter()
-    outs = module.run_many(traffic)
-    dt = time.perf_counter() - t0
-    cycles = module.modeled_cycles()
+    with MicroBatcher(
+        module, max_batch=args.batch, max_delay_s=args.deadline_ms / 1e3
+    ) as mb:
+        pending = [(time.perf_counter(), mb.submit(feeds)) for feeds in traffic]
+        outs = []
+        for t_submit, fut in pending:
+            outs.append(fut.result())
+            latencies.append(time.perf_counter() - t_submit)
+        stats = mb.stats
+    dt = max(time.perf_counter() - t0, 1e-9)  # guard: never divide by zero
+
+    n = max(len(outs), 1)
+    cycles = module.modeled_cycles()  # largest bucket's plan
     print(
-        f"[serve] {model.name} on {target.describe()}: compiled in "
-        f"{t_compile * 1e3:.1f} ms, {len(outs)} requests in {dt:.3f}s "
-        f"({len(outs) / dt:.0f} req/s, {dt / len(outs) * 1e6:.1f} us/req)"
+        f"[serve] {model.name} on {target.describe()}: compiled "
+        f"{len(buckets)} bucket plans {list(buckets)} in "
+        f"{t_compile * 1e3:.1f} ms"
     )
     print(
-        f"[serve] modeled cycles/request: {cycles['total']:,.0f} "
-        f"(accel {cycles['accel']:,.0f} / host {cycles['host']:,.0f})"
+        f"[serve] {n} requests in {dt:.3f}s ({n / dt:.0f} req/s); latency "
+        f"p50 {_percentile(latencies, 50) * 1e6:.1f} us / "
+        f"p99 {_percentile(latencies, 99) * 1e6:.1f} us; "
+        f"{stats.batches} dispatches, mean batch {stats.mean_batch():.1f}"
     )
-    print(f"[serve] sample output: {np.asarray(outs[0][0]).ravel()[:8]}")
+    print(
+        f"[serve] modeled cycles/request at batch {buckets[-1]}: "
+        f"{cycles['total'] / buckets[-1]:,.0f} "
+        f"(accel {cycles['accel'] / buckets[-1]:,.0f} / "
+        f"host {cycles['host'] / buckets[-1]:,.0f})"
+    )
+    if outs:
+        print(f"[serve] sample output: {np.asarray(outs[0][0]).ravel()[:8]}")
 
 
 def serve_lm(args) -> None:
@@ -98,6 +138,13 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument(
+        "--deadline-ms",
+        type=float,
+        default=2.0,
+        help="micro-batching deadline: max wait after the oldest queued "
+        "request before dispatching a partial batch (--zoo mode)",
+    )
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args()
@@ -106,6 +153,8 @@ def main():
         raise SystemExit("pass exactly one of --arch (LM) or --zoo (accelerator)")
     if args.requests < 1:
         raise SystemExit("--requests must be >= 1")
+    if args.batch < 1:
+        raise SystemExit("--batch must be >= 1")
     if args.zoo:
         serve_zoo(args)
     else:

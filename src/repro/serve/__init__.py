@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve.microbatch import BatchStats, MicroBatcher
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = ["BatchStats", "MicroBatcher", "ServeConfig", "ServingEngine"]

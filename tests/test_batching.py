@@ -1,0 +1,251 @@
+"""Batch-aware serving runtime: bucketed BatchedModule compilation via the
+front door, padded dispatch bit-exactness across the whole zoo x accelerator
+x mode matrix, bucket selection, batched frontend import, and the batched
+cycle model."""
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import DEFAULT_BATCH_BUCKETS, CompileOptions, Target, _resolve_buckets
+from repro.core import ir
+from repro.core.batching import BatchedModule, pick_bucket
+from repro.core.pipeline import PUBLIC_MODES
+from repro.core.zoo import ZOO, get_model
+
+NUMPY_EXACT = ("gemmini", "edge_npu")
+
+
+def _target(acc: str, mode: str = "optimized", **kw) -> Target:
+    return Target(acc, mode=mode, cache=False, **kw)
+
+
+# -- the acceptance matrix: batched == per-sample, padding never leaks ---------
+
+
+@pytest.mark.parametrize("mode", PUBLIC_MODES)
+@pytest.mark.parametrize(
+    "model_name,acc",
+    [(m.name, a) for m in ZOO.values() for a in m.accelerators if a in NUMPY_EXACT],
+)
+def test_batched_bit_exact_vs_per_sample(model_name, acc, mode):
+    """Six requests through a single 4-bucket: one full chunk plus a tail
+    padded from 2 to 4 — every output must be bit-exact with per-sample
+    execution, for every zoo model x accelerator x mode."""
+    model = get_model(model_name)
+    batched = repro.compile(
+        model_name, _target(acc, mode), options=CompileOptions(batch_buckets=(4,))
+    )
+    per_sample = repro.compile(model_name, _target(acc, mode))
+    traffic = [model.feeds(seed=s) for s in range(6)]
+    outs = batched.run_many(traffic)
+    assert len(outs) == len(traffic)
+    for feeds, out in zip(traffic, outs):
+        ref = per_sample.run(feeds)
+        assert len(out) == len(ref)
+        for o, r in zip(out, ref):
+            assert o.shape == r.shape and str(o.dtype) == str(r.dtype)
+            assert np.array_equal(o, r)
+
+
+def test_batched_traced_matches_batched_hand_built():
+    """The traced-frontend batched form (what ``repro.compile`` uses) and
+    the hand-built batched graph execute bit-exactly — including the
+    batched-matmul attention path."""
+    model = get_model("transformer_block")
+    backend = repro.backend_for(_target("gemmini"))
+    built = backend.compile_graph(model.build(batch=4), mode="proposed")
+    traced = backend.compile_graph(model.trace(batch=4), mode="proposed")
+    packed = {"x": np.stack([model.feeds(seed=s)["x"] for s in range(4)])}
+    for b, t in zip(built.run(packed), traced.run(packed)):
+        assert np.array_equal(b, t)
+
+
+def test_batched_callable_front_door():
+    """A plain jnp callable compiles into a BatchedModule: example inputs
+    are batch-widened per bucket and results match the unbatched module."""
+    from repro.core.zoo import MLP_RQ_SCALE, MLP_W_SCALE, make_mlp_fn, mlp_params
+
+    layers = (16, 16, 16)
+    fn = make_mlp_fn(layers)
+    params = mlp_params(layers)
+    example = {"x": np.zeros((1, 16), dtype=np.int8)}
+    batched = repro.compile(
+        fn,
+        _target("gemmini"),
+        example_inputs=example,
+        params=params,
+        options=CompileOptions(batch_buckets=(1, 4)),
+    )
+    ref = repro.compile(
+        fn, _target("gemmini"), example_inputs=example, params=params
+    )
+    assert isinstance(batched, BatchedModule)
+    assert batched.bucket_sizes() == (1, 4)
+    traffic = [
+        {"x": np.full((1, 16), i - 3, dtype=np.int8)} for i in range(5)
+    ]
+    for feeds, out in zip(traffic, batched.run_many(traffic)):
+        assert np.array_equal(out[0], ref.run(feeds)[0])
+    assert MLP_W_SCALE and MLP_RQ_SCALE  # imported scales stay in sync
+
+
+# -- bucket selection / resolution --------------------------------------------
+
+
+def test_pick_bucket_smallest_fit_else_largest():
+    buckets = (1, 4, 16)
+    assert pick_bucket(buckets, 1) == 1
+    assert pick_bucket(buckets, 2) == 4
+    assert pick_bucket(buckets, 4) == 4
+    assert pick_bucket(buckets, 5) == 16
+    assert pick_bucket(buckets, 100) == 16
+
+
+def test_plan_chunks_fills_tail_before_padding():
+    """A sub-largest tail fills with smaller buckets instead of padding
+    straight to a much larger one: 23 requests over (1, 4, 16) run as
+    16 + 4 + (3 padded to 4), never 7 padded to 16."""
+    from repro.core.batching import plan_chunks
+
+    buckets = (1, 4, 16)
+    assert plan_chunks(buckets, 23) == [16, 4, 3]
+    assert plan_chunks(buckets, 32) == [16, 16]
+    assert plan_chunks(buckets, 7) == [4, 3]
+    assert plan_chunks(buckets, 5) == [4, 1]
+    assert plan_chunks(buckets, 3) == [3]  # pads to 4: waste < 2x
+    assert plan_chunks((4,), 2) == [2]  # no smaller bucket: pad
+    assert plan_chunks((4,), 6) == [4, 2]
+    assert sum(plan_chunks(buckets, 1000)) == 1000
+
+
+def test_target_batch_size_builds_default_ladder():
+    assert _resolve_buckets(_target("gemmini", batch_size=16), CompileOptions()) == (
+        1,
+        4,
+        16,
+    )
+    assert _resolve_buckets(_target("gemmini", batch_size=6), CompileOptions()) == (
+        1,
+        4,
+        6,
+    )
+    assert (
+        _resolve_buckets(_target("gemmini", batch_size=1), CompileOptions()) is None
+    )
+    # explicit buckets win over the ladder
+    assert _resolve_buckets(
+        _target("gemmini", batch_size=16), CompileOptions(batch_buckets=(2, 8))
+    ) == (2, 8)
+    assert DEFAULT_BATCH_BUCKETS == (1, 4, 16)
+
+
+def test_run_many_chunks_greedily_across_buckets():
+    model = get_model("mlp_tiny")
+    batched = repro.compile(
+        "mlp_tiny", _target("gemmini"), options=CompileOptions(batch_buckets=(1, 4))
+    )
+    per_sample = repro.compile("mlp_tiny", _target("gemmini"))
+    traffic = [model.feeds(seed=s) for s in range(9)]  # 4 + 4 + 1
+    for feeds, out in zip(traffic, batched.run_many(traffic)):
+        assert np.array_equal(out[0], per_sample.run(feeds)[0])
+    single = batched.run(traffic[0])
+    assert np.array_equal(single[0], per_sample.run(traffic[0])[0])
+
+
+# -- validation ----------------------------------------------------------------
+
+
+def test_invalid_buckets_raise():
+    with pytest.raises(ValueError, match="positive int"):
+        repro.compile(
+            "mlp_tiny", _target("gemmini"), options=CompileOptions(batch_buckets=(0,))
+        )
+    with pytest.raises(ValueError, match="at least one bucket"):
+        repro.compile(
+            "mlp_tiny", _target("gemmini"), options=CompileOptions(batch_buckets=())
+        )
+    with pytest.raises(repro.TargetError, match="batch_size"):
+        Target("gemmini", batch_size=0)
+
+
+def test_prebuilt_graph_rejects_batch_buckets():
+    graph = get_model("mlp_tiny").build()
+    with pytest.raises(ValueError, match="fixed-shape"):
+        repro.compile(
+            graph, _target("gemmini"), options=CompileOptions(batch_buckets=(1, 4))
+        )
+
+
+def test_batched_feed_validation_lists_all_problems():
+    batched = repro.compile(
+        "mlp_tiny", _target("gemmini"), options=CompileOptions(batch_buckets=(4,))
+    )
+    good = get_model("mlp_tiny").feeds(seed=0)
+    with pytest.raises(repro.FeedError) as e:
+        batched.run_many([good, {"y": good["x"]}])
+    msg = str(e.value)
+    assert "missing feed for input 'x'" in msg
+    assert "unknown feed 'y'" in msg
+    with pytest.raises(repro.FeedError, match="per-sample"):
+        batched.run({"x": np.zeros((4, 16), dtype=np.int8)})  # batched feed
+
+
+# -- batched plans and the cycle model ----------------------------------------
+
+
+def test_one_plan_per_bucket_with_folded_m_dimension():
+    """The bucket modules really are separately planned batched graphs: the
+    GEMM workloads carry batch folded into the M dimension."""
+    from repro.core.strategy import workload_from_node
+
+    batched = repro.compile(
+        "mlp_tiny", _target("gemmini"), options=CompileOptions(batch_buckets=(1, 4))
+    )
+    for bucket in batched.bucket_sizes():
+        mod = batched.bucket_module(bucket)
+        assert mod.plan is not None
+        gemms = [n for n in mod.ops]
+        assert gemms
+        for n in gemms:
+            assert workload_from_node(n).N == bucket  # batch folded into M
+
+
+def test_batched_cycles_amortize_per_request():
+    """CoSA schedules the batched shape (one padded GEMM sweep), so the
+    modeled per-request cost at batch 4 must undercut 4 replays of the
+    per-sample plan."""
+    batched = repro.compile(
+        "mlp_tiny", _target("gemmini"), options=CompileOptions(batch_buckets=(4,))
+    )
+    per_sample = repro.compile("mlp_tiny", _target("gemmini"))
+    assert (
+        batched.modeled_cycles(4)["total"]
+        < 4 * per_sample.modeled_cycles()["total"]
+    )
+
+
+def test_batched_matmul_instances_charged_in_cycle_model():
+    """A batched activation-activation matmul replays its per-sample GEMM
+    per instance; the cycle model must scale with the batch."""
+    from repro.core.strategy import gemm_instances
+
+    backend = repro.backend_for(_target("gemmini"))
+    model = get_model("transformer_block")
+    mod1 = backend.compile_graph(model.build(batch=1), mode="proposed")
+    mod4 = backend.compile_graph(model.build(batch=4), mode="proposed")
+    bmm1 = [n for n in mod1.ops if len(n.inputs[1].shape) == 3]
+    bmm4 = [n for n in mod4.ops if len(n.inputs[1].shape) == 3]
+    assert len(bmm1) == len(bmm4) == 2  # scores and context
+    assert all(gemm_instances(n) == 1 for n in bmm1)
+    assert all(gemm_instances(n) == 4 for n in bmm4)
+    assert mod4.modeled_cycles()["accel"] > mod1.modeled_cycles()["accel"]
+
+
+def test_batched_dense_ir_shapes():
+    x = ir.input_((4, 8, 16), "int8", name="x")
+    w = ir.input_((4, 16, 8), "int8", name="w")
+    node = ir.dense(x, w)
+    assert node.shape == (4, 8, 8) and node.dtype == "int32"
+    with pytest.raises(ValueError, match="batched dense shape mismatch"):
+        ir.dense(x, ir.input_((2, 16, 8), "int8", name="w2"))

@@ -1,0 +1,261 @@
+"""Concurrency-safety regressions for the serving runtime: compiled
+modules shared across threads (per-call pooled arenas + thread-local
+executor scratch), the locked-LRU backend memo, and the scheduler /
+persistent schedule cache hammered while run_many traffic is in flight."""
+
+import sys
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+import repro
+import repro.api as api
+from repro.core import build_backend
+from repro.core.descriptions import make_gemmini_description
+from repro.core.strategy import workload_from_node
+from repro.core.zoo import get_model
+
+
+@pytest.fixture
+def fine_grained_switching():
+    """Force frequent GIL handoffs so cross-thread interleavings that would
+    take minutes to surface appear within a few hundred iterations."""
+    prev = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)
+    try:
+        yield
+    finally:
+        sys.setswitchinterval(prev)
+
+
+# -- satellite: one module, many threads --------------------------------------
+
+
+def test_concurrent_run_on_shared_module_is_isolated(fine_grained_switching):
+    """Regression: ``CompiledModule`` used to reuse ONE buffer arena and
+    ONE preallocated requantize scratch across calls, so two concurrent
+    callers corrupted each other's activations (reliably reproducible on
+    the old code with a quantized layer wide enough that the fused epilogue
+    spans several GIL switches).  Each thread drives its own feeds through
+    a shared module and must always see its own results."""
+    from repro.core import ir
+
+    rng = np.random.default_rng(0)
+    d, batch = 256, 64
+    w = (rng.normal(size=(d, d)) * 0.05).astype(np.float32)
+    b = rng.integers(-64, 64, size=(d,)).astype(np.int32)
+
+    def graph():
+        x = ir.input_((batch, d), "int8", name="x")
+        wq = ir.quantize(ir.transpose(ir.const(w), (1, 0)), scale=0.0625)
+        h = ir.bias_add(ir.dense(x, wq), ir.const(b))
+        h = ir.clip(ir.requantize(h, scale=1.0 / 64.0), lo=-128, hi=127)
+        return ir.Graph([h], name="wide_qdense")
+
+    backend = build_backend(make_gemmini_description())
+    module = backend.compile_graph(graph(), mode="proposed")
+
+    per_thread = [
+        {"x": rng.integers(-128, 128, (batch, d)).astype(np.int8)}
+        for _ in range(4)
+    ]
+    expected = [module.run(f)[0].copy() for f in per_thread]
+    failures: list[str] = []
+    barrier = threading.Barrier(len(per_thread))
+
+    def worker(tid: int):
+        barrier.wait()
+        for i in range(25):
+            out = module.run(per_thread[tid])[0]
+            if not np.array_equal(out, expected[tid]):
+                failures.append(f"thread {tid} iteration {i}: corrupted output")
+                return
+
+    threads = [
+        threading.Thread(target=worker, args=(t,)) for t in range(len(per_thread))
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not failures, failures[0]
+
+
+def test_concurrent_run_many_on_shared_batched_module(fine_grained_switching):
+    """A BatchedModule (bucketed plans over thread-safe bucket modules) can
+    serve a whole thread pool: every caller gets bit-exact results."""
+    model = get_model("mlp_tiny")
+    batched = repro.compile(
+        "mlp_tiny",
+        repro.Target("gemmini", cache=False),
+        options=repro.CompileOptions(batch_buckets=(1, 4)),
+    )
+    traffic = [model.feeds(seed=s) for s in range(6)]
+    expected = [o[0].copy() for o in batched.run_many(traffic)]
+
+    def worker(_):
+        outs = batched.run_many(traffic)
+        return all(
+            np.array_equal(o[0], e) for o, e in zip(outs, expected)
+        )
+
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        assert all(pool.map(worker, range(24)))
+
+
+# -- satellite: the backend memo is a locked LRU ------------------------------
+
+
+@pytest.fixture
+def small_backend_memo(monkeypatch):
+    repro.clear_backend_cache()
+    monkeypatch.setattr(api, "_BACKENDS_MAX", 3)
+    yield
+    repro.clear_backend_cache()
+
+
+def _targets(n: int) -> list[repro.Target]:
+    """Distinct memo keys without touching disk caches."""
+    combos = [
+        ("gemmini", True),
+        ("edge_npu", True),
+        ("gemmini", False),
+        ("edge_npu", False),
+        ("tpu_v5e", True),
+        ("tpu_v5e", False),
+    ]
+    return [
+        repro.Target(acc, cache=False, use_mip=mip) for acc, mip in combos[:n]
+    ]
+
+
+def test_backend_memo_is_lru_not_fifo(small_backend_memo):
+    """Regression: eviction used to be FIFO, so the hottest backend was the
+    first one thrown away.  A hit must move its entry to the back of the
+    eviction order."""
+    t1, t2, t3, t4 = _targets(4)
+    b1 = repro.backend_for(t1)
+    repro.backend_for(t2)
+    b3 = repro.backend_for(t3)
+    assert repro.backend_for(t1) is b1  # hit: t1 becomes most recently used
+    b2_evicted = repro.backend_for(t4)  # full: evicts t2 (LRU), NOT t1
+    assert b2_evicted is not None
+    assert repro.backend_for(t1) is b1  # t1 survived
+    assert repro.backend_for(t3) is b3  # t3 survived
+    # t2 was evicted: resolving it again builds (and memoizes) a fresh one
+
+
+def test_backend_memo_eviction_drops_least_recently_used(small_backend_memo):
+    t1, t2, t3, t4 = _targets(4)
+    b2 = repro.backend_for(t2)
+    repro.backend_for(t1)
+    repro.backend_for(t3)
+    repro.backend_for(t2)  # refresh t2
+    repro.backend_for(t4)  # evicts t1
+    assert repro.backend_for(t2) is b2
+    # capacity stayed bounded
+    assert len(api._BACKENDS) <= api._BACKENDS_MAX
+
+
+def test_backend_memo_concurrent_resolution_shares_one_backend(
+    small_backend_memo, fine_grained_switching
+):
+    """Regression: concurrent ``compile()`` calls used to race the unlocked
+    eviction loop.  All racers must converge on one published backend (so
+    they share its scheduler memo), with no exceptions."""
+    target = repro.Target("gemmini", cache=False)
+
+    def resolve(_):
+        return id(repro.backend_for(target))
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        ids = list(pool.map(resolve, range(32)))
+    assert len(set(ids)) == 1
+
+
+def test_backend_memo_concurrent_churn_stays_bounded(
+    small_backend_memo, fine_grained_switching
+):
+    """Hammer distinct keys from many threads: the memo must never blow its
+    bound or corrupt (the old unlocked while/pop loop could)."""
+    targets = _targets(6)
+
+    def resolve(i):
+        return repro.backend_for(targets[i % len(targets)])
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        list(pool.map(resolve, range(48)))
+    assert len(api._BACKENDS) <= api._BACKENDS_MAX
+
+
+# -- satellite: scheduler single-flight + persistent cache under traffic ------
+
+
+def test_cold_dse_single_flight_while_run_many_traffic_in_flight(
+    tmp_path, fine_grained_switching
+):
+    """Thread pool hammering cold compiles (same workloads) against ONE
+    backend with a persistent schedule cache, while run_many serving
+    traffic runs on an already-compiled module of the same backend: the
+    DSE sweep must run exactly once per unique workload (single-flight +
+    cache), every compile must agree bit-exactly, and the persistent tier
+    must land on disk."""
+    backend = repro.build_integrated_backend(
+        make_gemmini_description(), cache=True, cache_dir=tmp_path
+    )
+    model = get_model("toycar_mlp")
+    served = backend.compile_graph(get_model("mlp_tiny").build(), mode="proposed")
+    serve_traffic = [get_model("mlp_tiny").feeds(seed=s) for s in range(8)]
+    serve_expected = [o[0].copy() for o in served.run_many(serve_traffic)]
+    feeds = model.feeds(seed=11)
+    stop = threading.Event()
+    serve_failures: list[str] = []
+
+    def serve_loop():
+        while not stop.is_set():
+            outs = served.run_many(serve_traffic)
+            if not all(
+                np.array_equal(o[0], e) for o, e in zip(outs, serve_expected)
+            ):
+                serve_failures.append("serving output corrupted during compiles")
+                return
+
+    def compile_once(_):
+        mod = backend.compile_graph(model.build(), mode="proposed")
+        return mod.run(feeds)[0]
+
+    servers = [threading.Thread(target=serve_loop) for _ in range(2)]
+    for t in servers:
+        t.start()
+    try:
+        with ThreadPoolExecutor(max_workers=6) as pool:
+            results = list(pool.map(compile_once, range(6)))
+    finally:
+        stop.set()
+        for t in servers:
+            t.join()
+
+    assert not serve_failures
+    for r in results[1:]:
+        assert np.array_equal(results[0], r)
+    # one DSE sweep per unique GEMM workload, never per compile/thread
+    reference = backend.compile_graph(model.build(), mode="proposed")
+    unique_workloads = {
+        (wl.N, wl.C, wl.K)
+        for wl in (
+            workload_from_node(n) for n in (*reference.ops, *served.ops)
+        )
+    }
+    assert backend.scheduler.n_solver_calls == len(unique_workloads)
+    assert backend.schedule_cache.file.exists()
+
+    # a FRESH backend over the same cache dir answers every schedule from
+    # the persistent tier: zero solver calls
+    warm = repro.build_integrated_backend(
+        make_gemmini_description(), cache=True, cache_dir=tmp_path
+    )
+    warm_mod = warm.compile_graph(model.build(), mode="proposed")
+    assert warm.scheduler.n_solver_calls == 0
+    assert np.array_equal(warm_mod.run(feeds)[0], results[0])

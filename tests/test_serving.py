@@ -1,0 +1,144 @@
+"""Serving-layer tests: the micro-batching request queue and the
+``launch/serve.py`` zoo driver (warmup, guarded math, p50/p99 reporting)."""
+
+import argparse
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.zoo import get_model
+from repro.launch.serve import serve_zoo
+from repro.serve import MicroBatcher
+
+
+@pytest.fixture(scope="module")
+def batched_mlp():
+    return repro.compile(
+        "mlp_tiny",
+        repro.Target("gemmini", cache=False),
+        options=repro.CompileOptions(batch_buckets=(1, 4)),
+    )
+
+
+@pytest.fixture(scope="module")
+def mlp_reference():
+    return repro.compile("mlp_tiny", repro.Target("gemmini", cache=False))
+
+
+# -- MicroBatcher --------------------------------------------------------------
+
+
+def test_microbatcher_results_match_per_request_execution(
+    batched_mlp, mlp_reference
+):
+    model = get_model("mlp_tiny")
+    traffic = [model.feeds(seed=s) for s in range(11)]
+    with MicroBatcher(batched_mlp, max_batch=4, max_delay_s=0.05) as mb:
+        futures = [mb.submit(f) for f in traffic]
+        outs = [f.result(timeout=10) for f in futures]
+    for feeds, out in zip(traffic, outs):
+        assert np.array_equal(out[0], mlp_reference.run(feeds)[0])
+
+
+def test_microbatcher_batches_bursts(batched_mlp):
+    """A burst submitted before the deadline must dispatch in few batches,
+    each capped at max_batch."""
+    model = get_model("mlp_tiny")
+    with MicroBatcher(batched_mlp, max_batch=4, max_delay_s=0.25) as mb:
+        futures = [mb.submit(model.feeds(seed=s)) for s in range(8)]
+        for f in futures:
+            f.result(timeout=10)
+        stats = mb.stats
+    assert stats.requests == 8
+    assert all(size <= 4 for size in stats.batch_sizes)
+    assert stats.batches <= 4  # batching actually happened (not 8 singles)
+    assert stats.mean_batch() >= 2.0
+
+
+def test_microbatcher_deadline_flushes_partial_batch(batched_mlp):
+    """One lone request must not wait for a full batch: the deadline
+    dispatches a partial batch."""
+    model = get_model("mlp_tiny")
+    with MicroBatcher(batched_mlp, max_batch=64, max_delay_s=0.01) as mb:
+        t0 = time.perf_counter()
+        out = mb.submit(model.feeds(seed=0)).result(timeout=10)
+        dt = time.perf_counter() - t0
+    assert out[0].shape == (1, 16)
+    assert dt < 5.0  # resolved by deadline, not by a full batch
+
+
+def test_microbatcher_isolates_bad_request_from_neighbors(
+    batched_mlp, mlp_reference
+):
+    """One request with invalid feeds must fail ONLY its own future; the
+    co-batched healthy requests still get their results."""
+    model = get_model("mlp_tiny")
+    good_feeds = [model.feeds(seed=s) for s in range(3)]
+    with MicroBatcher(batched_mlp, max_batch=4, max_delay_s=0.25) as mb:
+        futures = [mb.submit(f) for f in good_feeds[:1]]
+        bad = mb.submit({"x": np.zeros((2, 2), dtype=np.float32)})
+        futures += [mb.submit(f) for f in good_feeds[1:]]
+        for feeds, fut in zip(good_feeds, futures):
+            assert np.array_equal(
+                fut.result(timeout=10)[0], mlp_reference.run(feeds)[0]
+            )
+        with pytest.raises(repro.FeedError):
+            bad.result(timeout=10)
+
+
+def test_microbatcher_survives_cancelled_futures(batched_mlp):
+    """A client cancelling a queued future must not kill the dispatcher:
+    subsequent requests still resolve."""
+    model = get_model("mlp_tiny")
+    with MicroBatcher(batched_mlp, max_batch=4, max_delay_s=0.3) as mb:
+        doomed = mb.submit(model.feeds(seed=0))
+        cancelled = doomed.cancel()  # races the dispatcher; both paths OK
+        later = mb.submit(model.feeds(seed=1))
+        assert later.result(timeout=10)[0].shape == (1, 16)
+        if not cancelled:  # dispatcher won the race and ran it
+            assert doomed.result(timeout=10)[0].shape == (1, 16)
+
+
+def test_microbatcher_propagates_failures_and_keeps_serving(batched_mlp):
+    model = get_model("mlp_tiny")
+    with MicroBatcher(batched_mlp, max_batch=2, max_delay_s=0.01) as mb:
+        bad = mb.submit({"x": np.zeros((3, 3), dtype=np.float32)})
+        with pytest.raises(repro.FeedError):
+            bad.result(timeout=10)
+        good = mb.submit(model.feeds(seed=1))
+        assert good.result(timeout=10)[0].shape == (1, 16)
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit(model.feeds(seed=2))
+
+
+# -- serve_zoo driver ----------------------------------------------------------
+
+
+def _serve_args(**overrides):
+    base = dict(
+        zoo="mlp_tiny",
+        target="gemmini:optimized",
+        requests=4,
+        batch=4,
+        deadline_ms=1.0,
+    )
+    base.update(overrides)
+    return argparse.Namespace(**base)
+
+
+def test_serve_zoo_reports_percentiles(capsys):
+    serve_zoo(_serve_args(requests=8))
+    out = capsys.readouterr().out
+    assert "p50" in out and "p99" in out
+    assert "req/s" in out and "dispatches" in out
+
+
+def test_serve_zoo_single_fast_request_never_divides_by_zero(capsys):
+    """Regression: a fast target with one request used to risk printing
+    garbage or raising ZeroDivisionError (no warmup, unguarded dt)."""
+    serve_zoo(_serve_args(requests=1, batch=1))
+    out = capsys.readouterr().out
+    assert "1 requests" in out
+    assert "inf" not in out and "nan" not in out

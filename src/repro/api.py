@@ -183,6 +183,20 @@ class CompileOptions:
     #: fixed-shape).  None (default) -> the classic single-shape module
     #: unless ``Target.batch_size > 1`` supplies the default ladder.
     batch_buckets: tuple[int, ...] | None = None
+    #: measured DSE: time the K best modeled schedule candidates per node
+    #: on the lowered executor (Pallas interpret / emulated tiled loop —
+    #: whatever the target actually runs) and pick the wall-clock winner.
+    #: Measurements persist in the schedule cache under a ``measured{K}``
+    #: key, so warm recompiles do zero sweeps AND zero re-measurement.
+    #: None (default) keeps the pure cycle-model argmin.
+    measure_top_k: int | None = None
+
+    def __post_init__(self):
+        k = self.measure_top_k
+        if k is not None and (not isinstance(k, int) or k < 1):
+            raise ValueError(
+                f"measure_top_k must be a positive int or None, got {k!r}"
+            )
 
 
 # one backend per (accelerator fingerprint, backend options): repeated
@@ -417,6 +431,7 @@ def compile(
             mode=target.internal_mode,
             passes=options.passes,
             pass_context=options.pass_context,
+            measure_top_k=options.measure_top_k,
         )
         if not options.allow_host_fallback:
             _check_offload(module)

@@ -9,8 +9,12 @@ testable without the scheduling machinery.  Two paths:
     optimizer fuses in, and plan-time specialization over constant
     operands (pre-padded weight panels, bias preloaded as the initial
     accumulator tile).
-  * **TPU** (Pallas): the schedule lowers to a ``pl.pallas_call`` kernel
-    config; quantized ops take the int8 kernel with fused requant+clip.
+  * **Pallas** (TPU targets always; any accelerator when the target sets
+    ``use_pallas=True``): the schedule lowers to a ``pl.pallas_call``
+    kernel config — interpret mode on CPU hosts, real Mosaic on TPU;
+    quantized ops take the int8 kernel with fused requant+clip, convs run
+    host-side im2col first, batched 3-D denses replay the per-sample
+    kernel per instance.
 
 Epilogue attribute contract on generalized ops (set by the passes):
 
@@ -28,6 +32,7 @@ Epilogue attribute contract on generalized ops (set by the passes):
 
 from __future__ import annotations
 
+import os
 import threading
 from typing import Callable
 
@@ -80,13 +85,55 @@ def make_accel_executor(
                 f"generalized ops must provide them"
             )
 
-    if desc.name.startswith("tpu"):
-        return _make_tpu_executor(
+    if use_pallas or desc.name.startswith("tpu"):
+        return _make_pallas_executor(
             desc, mapping_gen, node, strategy, fused_epilogue, use_pallas
         )
     return _make_gemmini_executor(
         desc, mapping_gen, intrinsic_gen, node, strategy, fused_epilogue
     )
+
+
+def pallas_interpret_mode() -> bool:
+    """Interpret-mode Pallas everywhere except a real TPU backend.
+
+    Interpret mode executes the same kernel, BlockSpecs, and grid in pure
+    XLA-on-host, so CPU CI covers the exact tiling the cycle model priced;
+    on a TPU host the kernels compile through Mosaic.  Override with
+    ``REPRO_PALLAS_INTERPRET=0|1`` (e.g. to force interpret on a TPU VM
+    while debugging a kernel).
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.lower() not in ("0", "false", "no")
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def _im2col(x: np.ndarray, kh: int, kw: int, stride: int, padding: int) -> np.ndarray:
+    # registered preprocessing: im2col on the host (non-constant
+    # operand), then the conv is exactly the scheduled GEMM with
+    # HWIO weights flattened to (kh*kw*ci, co) — §3.2.
+    if padding:
+        x = np.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    n, h, wd, ci = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    cols = np.empty((n * oh * ow, kh * kw * ci), dtype=x.dtype)
+    idx = 0
+    for b_ in range(n):
+        for i in range(oh):
+            for j in range(ow):
+                patch = x[
+                    b_,
+                    i * stride : i * stride + kh,
+                    j * stride : j * stride + kw,
+                    :,
+                ]
+                cols[idx] = patch.reshape(-1)
+                idx += 1
+    return cols
 
 
 def _make_gemmini_executor(
@@ -116,32 +163,6 @@ def _make_gemmini_executor(
     # the elementwise epilogue runs over the conv's own output; pooling
     # then reduces it to the node shape.
     pre_shape = tuple(pool["conv_shape"]) if pool else out_shape
-
-    def _im2col(x, kh, kw, ci):
-        # registered preprocessing: im2col on the host (non-constant
-        # operand), then the conv is exactly the scheduled GEMM with
-        # HWIO weights flattened to (kh*kw*ci, co) — §3.2.
-        if padding:
-            x = np.pad(
-                x, ((0, 0), (padding, padding), (padding, padding), (0, 0))
-            )
-        n, h, wd, _ = x.shape
-        oh = (h - kh) // stride + 1
-        ow = (wd - kw) // stride + 1
-        cols = np.empty((n * oh * ow, kh * kw * ci), dtype=x.dtype)
-        idx = 0
-        for b_ in range(n):
-            for i in range(oh):
-                for j in range(ow):
-                    patch = x[
-                        b_,
-                        i * stride : i * stride + kh,
-                        j * stride : j * stride + kw,
-                        :,
-                    ]
-                    cols[idx] = patch.reshape(-1)
-                    idx += 1
-        return cols
 
     if pool:
         pool_size, pool_stride = pool["size"], pool["stride"]
@@ -188,7 +209,7 @@ def _make_gemmini_executor(
         w = np.asarray(w)
         if is_conv:
             kh, kw, ci, co = w.shape
-            x2 = _im2col(x, kh, kw, ci)
+            x2 = _im2col(x, kh, kw, stride, padding)
             w2 = w.reshape(kh * kw * ci, co)
             acc = tiled(x2, w2)
         elif is_bmm:
@@ -225,7 +246,7 @@ def _make_gemmini_executor(
         if is_conv:
             kh, kw, ci, co = w.shape
             w2 = w.reshape(kh * kw * ci, co)
-            conv_dims = (kh, kw, ci)
+            conv_dims = (kh, kw)
         else:
             w2 = np.ascontiguousarray(w.T) if transpose_b else w
             conv_dims = None
@@ -299,7 +320,7 @@ def _make_gemmini_executor(
         def gemmini_exec_planned(x, w=None, bias=None, residual=None):
             x = np.asarray(x)
             if conv_dims is not None:
-                x2 = _im2col(x, *conv_dims)
+                x2 = _im2col(x, *conv_dims, stride, padding)
             else:
                 x2 = x.reshape(-1, x.shape[-1])
             if (
@@ -325,61 +346,109 @@ def _make_gemmini_executor(
     return gemmini_exec
 
 
-def _make_tpu_executor(
+def _make_pallas_executor(
     desc: AcceleratorDescription,
     mapping_gen: MappingGenerator,
     node: Node,
     strategy: Strategy,
-    quantized: bool,
+    fused_quant: bool,
     use_pallas: bool,
 ) -> Callable:
-    """``quantized`` is the resolved fused-epilogue flag from
-    ``make_accel_executor``: the int8 kernel path with fused
-    requantize/clip."""
+    """Lower one accelerator step to the scheduled Pallas GEMM/qGEMM.
+
+    ``fused_quant`` is the resolved fused-epilogue flag from
+    ``make_accel_executor``: the int8 kernel with fused requantize/clip.
+    Every step shape the emulated path supports lowers here too:
+
+      * conv2d runs host-side im2col, then the scheduled GEMM over the
+        flattened HWIO weight panel (same §3.2 preprocessing the Gemmini
+        path registers);
+      * batched activation-activation matmuls (PR-5 3-D dense) replay the
+        per-sample scheduled kernel per batch instance — one jit compile,
+        since instances share shape and config;
+      * the ``pool`` epilogue reduces the epilogued conv output on the
+        host, and ``residual`` is added last, exactly like the emulated
+        executor.
+
+    Integer inputs always accumulate in int32 (not just the fused path):
+    int32 accumulation wraps mod 2^32 identically to the emulated
+    int64-accumulate-then-cast, so unfused naive-mode int GEMMs stay
+    bit-exact.
+    """
     import jax.numpy as jnp
 
     from repro.kernels import ops as kops
 
     attrs = node.attrs
-    if attrs.get("pool"):
-        raise NotImplementedError(
-            "fused pooling epilogues are not lowered on the TPU path "
-            "(conv2d has no Pallas kernel lowering)"
-        )
-    if len(node.inputs[1].shape) == 3:
-        raise NotImplementedError(
-            "batched activation-activation matmuls are not lowered on the "
-            "TPU path (no batched Pallas GEMM kernel)"
-        )
-    transpose_b = bool(attrs.get("transpose_b"))
-    epilogue = {
-        "requant_scale": attrs.get("requant_scale"),
-        "clip_lo": attrs.get("clip_lo"),
-        "clip_hi": attrs.get("clip_hi"),
-        "activation": attrs.get("activation"),
-    }
+    is_conv = node.op.endswith("conv2d")
+    is_bmm = not is_conv and len(node.inputs[1].shape) == 3
+    transpose_b = bool(attrs.get("transpose_b")) and not is_conv
+    stride = attrs.get("stride", 1)
+    padding = attrs.get("padding", 0)
+    pool = attrs.get("pool")
+    out_shape, out_dtype = node.shape, node.dtype
+    pre_shape = tuple(pool["conv_shape"]) if pool else out_shape
+    int_acc = np.issubdtype(np.dtype(node.inputs[0].dtype), np.integer)
+    # mirror the emulated ``_epilogue`` selection exactly: the fused
+    # requantize/clip only fires on resolved-quantized generalized ops;
+    # everything else gets at most an activation.
+    if fused_quant:
+        epilogue = {
+            "requant_scale": attrs["requant_scale"],
+            "clip_lo": attrs["clip_lo"],
+            "clip_hi": attrs["clip_hi"],
+        }
+    else:
+        epilogue = {"activation": attrs.get("activation")}
     cfg = mapping_gen.to_kernel_config(
         strategy.schedule,
-        acc_dtype="int32" if quantized else "float32",
-        out_dtype=node.dtype if node.dtype != "float64" else "float32",
+        acc_dtype="int32" if (fused_quant or int_acc) else "float32",
+        out_dtype=out_dtype if out_dtype != "float64" else "float32",
         epilogue=epilogue,
-        interpret=True,
+        interpret=pallas_interpret_mode(),
         has_bias=len(node.inputs) > 2 and node.inputs[2] is not None,
     )
 
-    def tpu_exec(x, w, bias=None, residual=None):
-        x_j = jnp.asarray(x)
-        w_j = jnp.asarray(w)
-        if transpose_b:
-            w_j = w_j.T
+    def _run2d(x_j, w_j, b_j):
+        if fused_quant:
+            return kops.qmatmul(x_j, w_j, b_j, cfg, use_pallas=use_pallas)
+        return kops.matmul(x_j, w_j, cfg, b_j, use_pallas=use_pallas)
+
+    if pool:
+        pool_size, pool_stride = pool["size"], pool["stride"]
+
+        def _finish(out):
+            out = out.reshape(pre_shape).astype(out_dtype)
+            return max_pool2d_ref(out, pool_size, pool_stride)
+
+    else:
+
+        def _finish(out):
+            return out.reshape(out_shape).astype(out_dtype)
+
+    def pallas_exec(x, w, bias=None, residual=None):
         b_j = jnp.asarray(bias) if bias is not None else None
-        if quantized:
-            out = kops.qmatmul(x_j, w_j, b_j, cfg, use_pallas=use_pallas)
+        if is_conv:
+            w = np.asarray(w)
+            kh, kw, ci, co = w.shape
+            x2 = _im2col(np.asarray(x), kh, kw, stride, padding)
+            out = _run2d(jnp.asarray(x2), jnp.asarray(w.reshape(kh * kw * ci, co)), b_j)
+        elif is_bmm:
+            x_j = jnp.asarray(x)
+            w_j = jnp.asarray(w)
+            if transpose_b:
+                w_j = w_j.swapaxes(-2, -1)
+            out = jnp.stack(
+                [_run2d(x_j[i], w_j[i], b_j) for i in range(x_j.shape[0])]
+            )
         else:
-            out = kops.matmul(x_j, w_j, cfg, b_j, use_pallas=use_pallas)
-        out = np.asarray(out).reshape(node.shape)
+            w_j = jnp.asarray(w)
+            if transpose_b:
+                w_j = w_j.T
+            out = _run2d(jnp.asarray(x), w_j, b_j)
+        out = _finish(np.asarray(out))
         if residual is not None:
             out = out + residual
         return out
 
-    return tpu_exec
+    return pallas_exec

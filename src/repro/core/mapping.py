@@ -60,10 +60,14 @@ class MappingGenerator:
         block_m = schedule.tile(level, "N")
         block_k = schedule.tile(level, "C")
         block_n = schedule.tile(level, "K")
-        # MXU alignment floor: never emit sub-lane blocks.
-        block_m = max(block_m, 8)
-        block_k = max(block_k, 128)
-        block_n = max(block_n, 128)
+        if not interpret:
+            # MXU alignment floor: never emit sub-lane blocks on real
+            # Mosaic.  Interpret mode keeps the schedule's exact buffer
+            # tiles (any block shape is legal in emulation), so the CPU CI
+            # executes the same tiling the cycle model priced.
+            block_m = max(block_m, 8)
+            block_k = max(block_k, 128)
+            block_n = max(block_n, 128)
         ep = epilogue or {}
         return GemmKernelConfig(
             block_m=block_m,

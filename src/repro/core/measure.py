@@ -1,0 +1,61 @@
+"""Wall-clock measurement of lowered executors (measured DSE).
+
+The cycle model ranks the extended-CoSA sweep, but a model is only as
+honest as its calibration — AutoTVM closes the same loop with on-device
+timing, and MATCH validates its cost model the same way (PAPERS.md).
+``CompileOptions(measure_top_k=K)`` re-ranks the K best modeled
+candidates by the measured latency of the *actual lowered executor*
+(interpret-mode Pallas or the emulated tiled loop, whichever the target
+runs) and persists the winner plus the raw timings in the schedule
+cache, so warm boots re-measure nothing.
+
+Timing protocol: deterministic synthetic operands, ``warmup`` untimed
+calls (jit compilation, numpy allocation warm-up), then best-of-``repeats``
+``perf_counter`` — best-of is the standard noise floor estimator for
+short kernels (min is robust to scheduler preemption; mean is not).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.ir import Node
+
+
+def synthetic_args(node: Node, seed: int = 0) -> list:
+    """Deterministic synthetic operands matching ``node.inputs``
+    shapes/dtypes (integer operands stay small so quantized accumulators
+    match real activation magnitudes)."""
+    rng = np.random.default_rng(seed)
+    args = []
+    for inp in node.inputs:
+        if inp is None:
+            args.append(None)
+            continue
+        dt = np.dtype(inp.dtype)
+        if np.issubdtype(dt, np.integer):
+            args.append(rng.integers(-100, 100, size=inp.shape).astype(dt))
+        else:
+            args.append(rng.standard_normal(inp.shape).astype(dt))
+    return args
+
+
+def time_executor(
+    executor: Callable,
+    args: Sequence,
+    *,
+    warmup: int = 1,
+    repeats: int = 3,
+) -> float:
+    """Best-of-``repeats`` wall-clock seconds for one executor call."""
+    for _ in range(warmup):
+        executor(*args)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        executor(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best

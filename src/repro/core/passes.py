@@ -365,7 +365,13 @@ def _partition(graph: Graph, ctx: PassContext) -> int:
     marked = 0
     for n in graph.toposort():
         base = n.op.replace("generalized_", "")
-        if base in supported and n.op != "input":
+        x = n.inputs[0] if n.inputs else None
+        operand_dtype = x.dtype if x is not None else n.dtype
+        if (
+            base in supported
+            and n.op != "input"
+            and desc.supports_dtype(n.op, operand_dtype)
+        ):
             n.target = "accel"
             marked += 1
         else:
@@ -391,8 +397,13 @@ def _capability_filtered(rules, desc: AcceleratorDescription):
     def filtered(r):
         def build(m: Match, graph: Graph, _build=r.build):
             core = m.captures.get("core")
-            if core is not None and core.op not in supported:
-                return None
+            if core is not None:
+                x = core.inputs[0] if core.inputs else None
+                dtype = x.dtype if x is not None else core.dtype
+                if core.op not in supported or not desc.supports_dtype(
+                    core.op, dtype
+                ):
+                    return None
             return _build(m, graph)
 
         return RewriteRule(name=r.name, pattern=r.pattern, build=build)

@@ -101,23 +101,48 @@ class CompilerBackend:
     # attached by repro.integrate(): persistent cross-process schedule store
     # keyed by (workload, arch fingerprint, mode)
     schedule_cache: ScheduleCache | None = None
+    # wall-clock candidate timings performed by measured DSE — warm boots
+    # with ``measure_top_k`` set must keep this at zero (cache tests).
+    n_measurements: int = 0
     # the description (and the scheduler's solver) are frozen once the
     # backend is generated, so hash/probe them at most once per backend.
     _desc_fingerprint: str | None = None
     _solver_id: str | None = None
 
     # -- stage 2: strategy / schedule selection -----------------------------
-    def _cache_key(self, wl, mode: str) -> str:
+    def _cache_key(self, wl, mode: str, selector: str = "modeled") -> str:
         if self._desc_fingerprint is None:
             self._desc_fingerprint = self.desc.fingerprint()
         if self._solver_id is None:
             self._solver_id = self.scheduler.solver_id()
         return ScheduleCache.key_for(
-            wl, self._desc_fingerprint, mode, solver=self._solver_id
+            wl, self._desc_fingerprint, mode, solver=self._solver_id,
+            selector=selector,
         )
 
-    def _schedule_for(self, node: Node, mode: str) -> ScheduleResult:
+    def _schedule_for(
+        self, node: Node, mode: str, measure_top_k: int | None = None
+    ) -> ScheduleResult:
         wl = workload_from_node(node)
+        if measure_top_k is None:
+            return self._modeled_schedule_for(wl, mode)
+        mkey = None
+        if self.schedule_cache is not None:
+            mkey = self._cache_key(
+                wl, mode, selector=f"measured{measure_top_k}"
+            )
+            cached = self.schedule_cache.get(mkey)
+            if cached is not None:
+                return cached
+        # the modeled ranking feeds the measurement and is cached under its
+        # own key, so a later compile without measure_top_k is warm too
+        modeled = self._modeled_schedule_for(wl, mode)
+        result = self._measure_candidates(node, modeled, measure_top_k)
+        if mkey is not None:
+            self.schedule_cache.put(mkey, result)
+        return result
+
+    def _modeled_schedule_for(self, wl, mode: str) -> ScheduleResult:
         key = None
         if self.schedule_cache is not None:
             key = self._cache_key(wl, mode)
@@ -128,6 +153,52 @@ class CompilerBackend:
         if key is not None:
             self.schedule_cache.put(key, result)
         return result
+
+    def _measure_candidates(
+        self, node: Node, modeled: ScheduleResult, k: int
+    ) -> ScheduleResult:
+        """Re-rank the top-``k`` modeled candidates by measured latency of
+        the lowered executor; the wall-clock winner becomes ``best`` and
+        the raw timings ride along in ``measured`` (persisted with the
+        schedule, so warm boots skip both the sweep and the stopwatch)."""
+        from repro.core.measure import synthetic_args, time_executor
+
+        cands = modeled.ranked()[:k]
+        args = synthetic_args(node)
+        latencies = []
+        for sched, rep in cands:
+            sr = ScheduleResult(
+                best=sched,
+                report=rep,
+                n_candidates=modeled.n_candidates,
+                n_infeasible=modeled.n_infeasible,
+            )
+            strat = self.strategy_gen.generate(node, sr)
+            ex = make_accel_executor(
+                self.desc,
+                self.mapping_gen,
+                self.intrinsic_gen,
+                node,
+                strat,
+                use_pallas=self.use_pallas,
+            )
+            latencies.append(time_executor(ex, args))
+            self.n_measurements += 1
+        winner = min(range(len(latencies)), key=latencies.__getitem__)
+        best, report = cands[winner]
+        return ScheduleResult(
+            best=best,
+            report=report,
+            n_candidates=modeled.n_candidates,
+            n_infeasible=modeled.n_infeasible,
+            top=modeled.top,
+            measured={
+                "k": len(cands),
+                "winner": winner,
+                "latencies_s": latencies,
+                "modeled_cycles": [r.total_cycles for _, r in cands],
+            },
+        )
 
     def _schedule_uncached(self, wl, mode: str) -> ScheduleResult:
         if mode == "proposed":
@@ -172,6 +243,7 @@ class CompilerBackend:
         *,
         passes: list | None = None,
         pass_context: PassContext | None = None,
+        measure_top_k: int | None = None,
     ) -> CompiledModule:
         """Compile a graph: run the mode's pass pipeline, schedule every
         accelerator node, lower executors, and build the execution plan.
@@ -180,6 +252,9 @@ class CompilerBackend:
         internal names.  ``passes`` overrides the per-mode pipeline with an
         explicit pass list (testing / experimentation); ``pass_context``
         overrides the trace/dump instrumentation context.
+        ``measure_top_k`` enables measured DSE: the K best modeled
+        candidates per node are timed on the lowered executor and the
+        wall-clock winner is selected (cached under a ``measured{K}`` key).
         """
         mode = resolve_mode(mode)
         pm = PassManager(
@@ -198,7 +273,7 @@ class CompilerBackend:
         for n in graph.toposort():
             if n.target != "accel":
                 continue
-            sr = self._schedule_for(n, mode)
+            sr = self._schedule_for(n, mode, measure_top_k)
             strat = self.strategy_gen.generate(n, sr)
             module.ops[n] = CompiledOp(
                 node=n,

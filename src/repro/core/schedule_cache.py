@@ -45,12 +45,22 @@ def default_cache_dir() -> Path:
 
 
 def result_to_dict(r: ScheduleResult) -> dict:
-    return {
+    d = {
         "best": r.best.to_dict(),
         "report": dataclasses.asdict(r.report),
         "n_candidates": r.n_candidates,
         "n_infeasible": r.n_infeasible,
     }
+    # optional fields stay absent when empty so pre-PR-6 entries and new
+    # modeled-only entries serialize identically (and old readers, which
+    # pick keys by name, keep working)
+    if r.top:
+        d["top"] = [
+            [s.to_dict(), dataclasses.asdict(rep)] for s, rep in r.top
+        ]
+    if r.measured is not None:
+        d["measured"] = r.measured
+    return d
 
 
 def result_from_dict(d: dict) -> ScheduleResult:
@@ -59,6 +69,11 @@ def result_from_dict(d: dict) -> ScheduleResult:
         report=SimReport(**d["report"]),
         n_candidates=d["n_candidates"],
         n_infeasible=d["n_infeasible"],
+        top=tuple(
+            (Schedule.from_dict(s), SimReport(**rep))
+            for s, rep in d.get("top", [])
+        ),
+        measured=d.get("measured"),
     )
 
 
@@ -102,14 +117,21 @@ class ScheduleCache:
         desc: AcceleratorDescription | str,
         mode: str,
         solver: str = "mip",
+        selector: str = "modeled",
     ) -> str:
         """``desc`` is a description or its precomputed ``fingerprint()``
         (callers on a hot path memoize it).  ``solver`` names what actually
         produced the schedule (the scheduler's ``solver_id()``) so MIP- and
-        heuristic-derived entries never shadow each other."""
+        heuristic-derived entries never shadow each other.  ``selector``
+        discriminates how the winner was picked: ``"modeled"`` (cycle-model
+        argmin; key spelling unchanged from before measured DSE existed, so
+        existing caches stay warm) vs ``"measured{K}"`` (wall-clock re-rank
+        of the top-K candidates) — a measured entry never shadows a modeled
+        one and vice versa."""
         fp = desc if isinstance(desc, str) else desc.fingerprint()
+        sel = "" if selector == "modeled" else f"{selector}|"
         wl = workload.key()  # (N, C, K, in_bytes, w_bytes, out_bytes)
-        return f"{fp}|{solver}|{mode}|" + "x".join(str(v) for v in wl)
+        return f"{fp}|{solver}|{mode}|{sel}" + "x".join(str(v) for v in wl)
 
     # -- lookup / insert ----------------------------------------------------
     def get(self, key: str) -> ScheduleResult | None:

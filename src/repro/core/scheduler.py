@@ -34,12 +34,29 @@ from repro.core.schedule import Schedule, validate_schedule
 from repro.core.simulator import SimReport, simulate
 
 
+#: how many ranked candidates a DSE sweep retains alongside the winner —
+#: enough for measured re-ranking (``CompileOptions.measure_top_k``)
+#: without bloating the persistent cache.
+MAX_TOP_CANDIDATES = 8
+
+
 @dataclass(frozen=True)
 class ScheduleResult:
     best: Schedule
     report: SimReport
     n_candidates: int
     n_infeasible: int
+    #: ranked (Schedule, SimReport) candidates by modeled cycles, best
+    #: first (``top[0]`` is ``(best, report)`` on modeled results); empty
+    #: on pre-existing cache entries and single-candidate baselines.
+    top: tuple = ()
+    #: wall-clock selection record when measured DSE re-ranked the top
+    #: candidates (see ``CompilerBackend._measure_candidates``), else None.
+    measured: dict | None = None
+
+    def ranked(self) -> tuple:
+        """Ranked candidates for measurement; never empty."""
+        return self.top or ((self.best, self.report),)
 
 
 @dataclass
@@ -141,25 +158,21 @@ class ExtendedCosaScheduler:
         else:
             evaluated = [self._eval_candidate(workload, *c) for c in candidates]
 
-        best: Schedule | None = None
-        best_report: SimReport | None = None
-        n_infeasible = sum(1 for e in evaluated if e is None)
-        n_cand = len(evaluated) - n_infeasible
-        for e in evaluated:
-            if e is None:
-                continue
-            sched, report = e
-            if best_report is None or report.total_cycles < best_report.total_cycles:
-                best, best_report = sched, report
-
-        if best is None or best_report is None:
+        feasible = [e for e in evaluated if e is not None]
+        n_infeasible = len(evaluated) - len(feasible)
+        if not feasible:
             raise RuntimeError(
                 f"no feasible schedule for {workload.name} "
                 f"{workload.N}x{workload.C}x{workload.K} on {self.arch.name}"
             )
+        # stable sort: ties break on candidate order, identical to the old
+        # strict-argmin (and to the serial sweep when parallel=True)
+        ranked = sorted(feasible, key=lambda e: e[1].total_cycles)
+        best, best_report = ranked[0]
         return ScheduleResult(
             best=best,
             report=best_report,
-            n_candidates=n_cand,
+            n_candidates=len(feasible),
             n_infeasible=n_infeasible,
+            top=tuple(ranked[:MAX_TOP_CANDIDATES]),
         )

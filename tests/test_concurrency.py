@@ -259,3 +259,43 @@ def test_cold_dse_single_flight_while_run_many_traffic_in_flight(
     warm_mod = warm.compile_graph(model.build(), mode="proposed")
     assert warm.scheduler.n_solver_calls == 0
     assert np.array_equal(warm_mod.run(feeds)[0], results[0])
+
+
+# -- satellite: the Pallas kernel path under serving concurrency --------------
+
+
+def test_concurrent_pallas_module_run_many_and_microbatcher(
+    fine_grained_switching,
+):
+    """A ``use_pallas=True`` module shares jitted kernels across threads
+    (jax dispatch is thread-safe; the arena pooling around it must be
+    too): run_many traffic from a thread pool plus a MicroBatcher front
+    stay bit-exact with the single-threaded outputs."""
+    from repro.serve import MicroBatcher
+
+    model = get_model("mlp_tiny")
+    module = repro.compile(
+        "mlp_tiny",
+        repro.Target("gemmini", cache=False, use_pallas=True),
+        options=repro.CompileOptions(batch_buckets=(1, 4)),
+    )
+    traffic = [model.feeds(seed=s) for s in range(6)]
+    expected = [o[0].copy() for o in module.run_many(traffic)]
+
+    def worker(_):
+        outs = module.run_many(traffic)
+        return all(np.array_equal(o[0], e) for o, e in zip(outs, expected))
+
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        assert all(pool.map(worker, range(16)))
+
+    batcher = MicroBatcher(module, max_batch=4, max_delay_s=0.002)
+    try:
+        with ThreadPoolExecutor(max_workers=8) as pool:
+            outs = list(
+                pool.map(lambda f: batcher.submit(f).result(), traffic * 4)
+            )
+    finally:
+        batcher.close()
+    for got, want in zip(outs, expected * 4):
+        assert np.array_equal(got[0], want)

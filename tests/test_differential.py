@@ -1,0 +1,360 @@
+"""Property-based differential conformance fuzzer — the standing oracle
+for every pass and executor change.
+
+Small randomly-generated IR graphs (quantized/float dense chains, convs,
+elementwise chains) are compiled across {gemmini, edge_npu} x all three
+modes and must agree THREE ways:
+
+  planned executor  ==  legacy graph interpreter  ==  jnp reference
+
+bit-exact for integer outputs, allclose for float.  A seeded sweep always
+runs (hypothesis is an optional test extra); when hypothesis is
+installed, the same oracle runs under minimized random exploration.
+
+Generator invariants that make int8 paths bit-exact by construction:
+requantize scales are powers of two (float32-exact), operands stay small
+enough that accumulators fit well inside 2^24 (so float32 requantization
+in the kernels matches the interpreter's float64).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.api import CompileOptions, Target
+from repro.core import ir
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal envs
+    HAVE_HYPOTHESIS = False
+
+ACCELERATORS = ("gemmini", "edge_npu")
+MODES = ("optimized", "baseline", "naive")
+
+
+def _target(acc: str, mode: str, use_pallas: bool = False) -> Target:
+    # cache=False: fuzzed workloads must never pollute the user's
+    # persistent schedule cache; use_mip=False keeps sweeps fast
+    return Target(
+        acc, mode=mode, cache=False, use_mip=False, use_pallas=use_pallas
+    )
+
+
+# ---------------------------------------------------------------------------
+# spec -> (graph builder, feeds).  Builders return a FRESH graph per call:
+# the pass pipeline mutates graphs in place, so every consumer (interpreter,
+# jnp reference, each compile) gets its own copy.
+# ---------------------------------------------------------------------------
+
+
+def _qdense_chain_spec(rng: np.random.Generator) -> dict:
+    depth = int(rng.integers(1, 4))
+    dims = [int(d) for d in rng.choice([3, 5, 8, 13, 16, 24], size=depth + 1)]
+    return {
+        "kind": "qdense_chain",
+        "m": int(rng.integers(1, 6)),
+        "dims": dims,
+        "scales": [
+            2.0 ** -int(rng.integers(3, 8)) for _ in range(depth)
+        ],
+        "bias": [bool(rng.integers(0, 2)) for _ in range(depth)],
+        "transpose_b": [bool(rng.integers(0, 2)) for _ in range(depth)],
+        "relu_clip": [bool(rng.integers(0, 2)) for _ in range(depth)],
+    }
+
+
+def _fdense_chain_spec(rng: np.random.Generator) -> dict:
+    depth = int(rng.integers(1, 3))
+    dims = [int(d) for d in rng.choice([4, 7, 16, 20], size=depth + 1)]
+    return {
+        "kind": "fdense_chain",
+        "m": int(rng.integers(1, 5)),
+        "dims": dims,
+        "bias": [bool(rng.integers(0, 2)) for _ in range(depth)],
+        "act": [
+            str(rng.choice(["none", "relu", "gelu"])) for _ in range(depth)
+        ],
+    }
+
+
+def _qconv_spec(rng: np.random.Generator) -> dict:
+    return {
+        "kind": "qconv",
+        "hw": int(rng.integers(5, 9)),
+        "ci": int(rng.choice([3, 4, 8])),
+        "co": int(rng.choice([4, 8])),
+        "k": int(rng.choice([2, 3])),
+        "stride": int(rng.integers(1, 3)),
+        "padding": int(rng.integers(0, 2)),
+        "bias": bool(rng.integers(0, 2)),
+        "scale": 2.0 ** -int(rng.integers(4, 8)),
+    }
+
+
+def _ew_chain_spec(rng: np.random.Generator) -> dict:
+    return {
+        "kind": "ew_chain",
+        "shape": (int(rng.integers(1, 4)), int(rng.choice([5, 9, 16]))),
+        "ops": [
+            str(rng.choice(["add", "mul", "relu", "gelu"]))
+            for _ in range(int(rng.integers(2, 5)))
+        ],
+    }
+
+
+SPEC_MAKERS = (_qdense_chain_spec, _fdense_chain_spec, _qconv_spec, _ew_chain_spec)
+
+
+def _materialize(spec: dict, seed: int):
+    """(build, feeds) for a spec; consts are derived from ``seed`` so the
+    builder is deterministic and re-buildable."""
+    rng = np.random.default_rng(seed)
+    kind = spec["kind"]
+
+    if kind == "qdense_chain":
+        dims, m = spec["dims"], spec["m"]
+        x = rng.integers(-16, 16, size=(m, dims[0])).astype(np.int8)
+        ws = [
+            rng.integers(-8, 8, size=(dims[i], dims[i + 1])).astype(np.int8)
+            for i in range(len(dims) - 1)
+        ]
+        bs = [
+            rng.integers(-64, 64, size=(d,)).astype(np.int32)
+            for d in dims[1:]
+        ]
+
+        def build():
+            h = ir.input_((m, dims[0]), "int8", name="x")
+            for i, w in enumerate(ws):
+                if spec["transpose_b"][i]:
+                    wn = ir.transpose(ir.const(w.T), (1, 0))
+                else:
+                    wn = ir.const(w)
+                h = ir.dense(h, wn)
+                if spec["bias"][i]:
+                    h = ir.bias_add(h, ir.const(bs[i]))
+                h = ir.requantize(h, scale=spec["scales"][i])
+                lo = 0 if spec["relu_clip"][i] else -128
+                h = ir.clip(h, lo=lo, hi=127)
+            return ir.Graph([h], name="fuzz_qdense")
+
+        return build, {"x": x}
+
+    if kind == "fdense_chain":
+        dims, m = spec["dims"], spec["m"]
+        x = rng.standard_normal((m, dims[0])).astype(np.float32)
+        ws = [
+            (rng.standard_normal((dims[i], dims[i + 1])) * 0.3).astype(
+                np.float32
+            )
+            for i in range(len(dims) - 1)
+        ]
+        bs = [rng.standard_normal((d,)).astype(np.float32) for d in dims[1:]]
+
+        def build():
+            h = ir.input_((m, dims[0]), "float32", name="x")
+            for i, w in enumerate(ws):
+                h = ir.dense(h, ir.const(w))
+                if spec["bias"][i]:
+                    h = ir.bias_add(h, ir.const(bs[i]))
+                if spec["act"][i] == "relu":
+                    h = ir.relu(h)
+                elif spec["act"][i] == "gelu":
+                    h = ir.gelu(h)
+            return ir.Graph([h], name="fuzz_fdense")
+
+        return build, {"x": x}
+
+    if kind == "qconv":
+        hw, ci, co, k = spec["hw"], spec["ci"], spec["co"], spec["k"]
+        x = rng.integers(-16, 16, size=(1, hw, hw, ci)).astype(np.int8)
+        w = rng.integers(-8, 8, size=(k, k, ci, co)).astype(np.int8)
+        b = rng.integers(-64, 64, size=(co,)).astype(np.int32)
+
+        def build():
+            h = ir.input_((1, hw, hw, ci), "int8", name="x")
+            h = ir.conv2d(
+                h,
+                ir.const(w),
+                stride=spec["stride"],
+                padding=spec["padding"],
+            )
+            if spec["bias"]:
+                h = ir.bias_add(h, ir.const(b))
+            h = ir.requantize(h, scale=spec["scale"])
+            h = ir.clip(h, lo=-128, hi=127)
+            return ir.Graph([h], name="fuzz_qconv")
+
+        return build, {"x": x}
+
+    if kind == "ew_chain":
+        shape = spec["shape"]
+        x = rng.standard_normal(shape).astype(np.float32)
+        consts = [
+            rng.standard_normal(shape).astype(np.float32) for _ in spec["ops"]
+        ]
+
+        def build():
+            h = ir.input_(shape, "float32", name="x")
+            for op, c in zip(spec["ops"], consts):
+                if op == "add":
+                    h = ir.add(h, ir.const(c))
+                elif op == "mul":
+                    h = ir.mul(h, ir.const(c))
+                elif op == "relu":
+                    h = ir.relu(h)
+                else:
+                    h = ir.gelu(h)
+            return ir.Graph([h], name="fuzz_ew")
+
+        return build, {"x": x}
+
+    raise AssertionError(kind)
+
+
+# ---------------------------------------------------------------------------
+# the jnp reference: a third, independent evaluator over the same graph
+# ---------------------------------------------------------------------------
+
+
+def _jnp_gelu(x):
+    inner = jnp.sqrt(2.0 / jnp.pi) * (x + 0.044715 * x**3)
+    return 0.5 * x * (1.0 + jnp.tanh(inner))
+
+
+def jnp_reference(graph: ir.Graph, feeds: dict) -> np.ndarray:
+    """Evaluate the (pre-pass) graph with jax.numpy ops — int32
+    accumulation and float32 requantization, i.e. accelerator-kernel
+    numerics rather than the interpreter's int64/float64."""
+    vals: dict[ir.Node, jax.Array] = {}
+    for n in graph.toposort():
+        ins = [vals[i] if i is not None else None for i in n.inputs]
+        op = n.op
+        if op == "input":
+            v = jnp.asarray(feeds[n.name])
+        elif op == "const":
+            v = jnp.asarray(n.value)
+        elif op == "dense":
+            x, w = ins
+            acc_dt = jnp.int32 if n.dtype.startswith("int") else jnp.float32
+            v = jax.lax.dot_general(
+                x, w, (((1,), (0,)), ((), ())), preferred_element_type=acc_dt
+            ).astype(n.dtype)
+        elif op == "conv2d":
+            x, w = ins
+            acc_dt = jnp.int32 if n.dtype.startswith("int") else jnp.float32
+            p = n.attrs["padding"]
+            v = jax.lax.conv_general_dilated(
+                x.astype(acc_dt),
+                w.astype(acc_dt),
+                window_strides=(n.attrs["stride"],) * 2,
+                padding=[(p, p), (p, p)],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ).astype(n.dtype)
+        elif op == "bias_add":
+            v = (ins[0].astype(jnp.int32) + ins[1].astype(jnp.int32)).astype(
+                n.dtype
+            ) if n.dtype.startswith("int") else ins[0] + ins[1]
+        elif op == "requantize":
+            v = jnp.round(ins[0].astype(jnp.float32) * n.attrs["scale"])
+            if n.dtype.startswith(("int", "uint")):
+                info = np.iinfo(n.dtype)
+                v = jnp.clip(v, info.min, info.max)
+            v = v.astype(n.dtype)
+        elif op == "clip":
+            v = jnp.clip(ins[0], n.attrs["lo"], n.attrs["hi"]).astype(n.dtype)
+        elif op == "transpose":
+            v = jnp.transpose(ins[0], n.attrs["perm"])
+        elif op == "relu":
+            v = jnp.maximum(ins[0], 0)
+        elif op == "gelu":
+            v = _jnp_gelu(ins[0].astype(jnp.float32)).astype(n.dtype)
+        elif op == "add":
+            v = ins[0] + ins[1]
+        elif op == "mul":
+            v = ins[0] * ins[1]
+        else:
+            raise NotImplementedError(f"jnp_reference: {op}")
+        vals[n] = v
+    return np.asarray(vals[graph.outputs[0]])
+
+
+# ---------------------------------------------------------------------------
+# the oracle
+# ---------------------------------------------------------------------------
+
+
+def _assert_same(got: np.ndarray, want: np.ndarray, what: str, spec: dict):
+    got, want = np.asarray(got), np.asarray(want)
+    assert got.shape == want.shape and got.dtype == want.dtype, (
+        what,
+        spec,
+        got.shape,
+        got.dtype,
+        want.shape,
+        want.dtype,
+    )
+    if np.issubdtype(got.dtype, np.integer):
+        np.testing.assert_array_equal(got, want, err_msg=f"{what}: {spec}")
+    else:
+        np.testing.assert_allclose(
+            got, want, rtol=1e-4, atol=1e-4, err_msg=f"{what}: {spec}"
+        )
+
+
+def check_conformance(spec: dict, seed: int, use_pallas: bool = False):
+    build, feeds = _materialize(spec, seed)
+    interpreted = ir.execute_graph(build(), feeds)[0]
+    reference = jnp_reference(build(), feeds)
+    _assert_same(interpreted, reference, "interpreter-vs-jnp", spec)
+    modes = ("optimized",) if use_pallas else MODES
+    for acc in ACCELERATORS:
+        for mode in modes:
+            module = repro.compile(build(), _target(acc, mode, use_pallas))
+            planned = module.run(feeds)[0]
+            _assert_same(
+                planned, interpreted, f"planned[{acc}:{mode}]-vs-interpreter", spec
+            )
+            _assert_same(
+                planned, reference, f"planned[{acc}:{mode}]-vs-jnp", spec
+            )
+
+
+# -- always-running seeded sweep (hypothesis is optional) --------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_seeded_differential_sweep(seed):
+    rng = np.random.default_rng(1000 + seed)
+    maker = SPEC_MAKERS[seed % len(SPEC_MAKERS)]
+    check_conformance(maker(rng), seed=2000 + seed)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_seeded_differential_sweep_pallas(seed):
+    """The same oracle through the Pallas (interpret) execution backend."""
+    rng = np.random.default_rng(3000 + seed)
+    maker = SPEC_MAKERS[seed % len(SPEC_MAKERS)]
+    check_conformance(maker(rng), seed=4000 + seed, use_pallas=True)
+
+
+# -- hypothesis exploration (CI installs the `test` extra) -------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        spec_seed=st.integers(0, 2**20),
+        value_seed=st.integers(0, 2**20),
+        kind=st.integers(0, len(SPEC_MAKERS) - 1),
+    )
+    def test_hypothesis_differential(spec_seed, value_seed, kind):
+        rng = np.random.default_rng(spec_seed)
+        check_conformance(SPEC_MAKERS[kind](rng), seed=value_seed)

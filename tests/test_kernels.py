@@ -82,6 +82,104 @@ def test_qgemm_kernel_matches_ref(m, k, n):
     assert np.array_equal(np.asarray(out), np.asarray(expect))
 
 
+@pytest.mark.parametrize("dataflow", ["OS", "WS"])
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (100, 200, 72),  # ragged on every axis
+        (1, 300, 129),  # single-row activation, n just past a block
+        (130, 128, 128),  # ragged tail only on m
+        (128, 130, 257),  # ragged k and n
+    ],
+)
+def test_gemm_ragged_tails_both_dataflows(m, k, n, dataflow):
+    """Padding logic must be dataflow-independent: OS and WS walk the grid
+    in different orders but must produce the same (unpadded) result."""
+    cfg = GemmKernelConfig(
+        block_m=64, block_k=128, block_n=128, dataflow=dataflow, interpret=True
+    )
+    x = jax.random.normal(jax.random.key(2), (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.key(3), (k, n), jnp.float32)
+    out = ops.matmul(x, w, cfg)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(out, ref.gemm_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dataflow", ["OS", "WS"])
+@pytest.mark.parametrize("has_bias", [False, True])
+@pytest.mark.parametrize("activation", [None, "relu", "gelu"])
+def test_gemm_every_epilogue(dataflow, has_bias, activation):
+    """Full epilogue matrix (bias x activation x dataflow) vs the jnp
+    oracle — the epilogue runs once per output tile after the k loop, so
+    it must be insensitive to grid order."""
+    cfg = GemmKernelConfig(
+        block_m=64, block_k=128, block_n=128, dataflow=dataflow,
+        activation=activation, has_bias=has_bias, interpret=True,
+    )
+    x = jax.random.normal(jax.random.key(0), (96, 200), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (200, 136), jnp.float32)
+    b = jax.random.normal(jax.random.key(2), (136,), jnp.float32)
+    out = ops.matmul(x, w, cfg, b if has_bias else None)
+    expect = ref.gemm_ref(
+        x, w, b if has_bias else None, activation=activation
+    )
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dataflow", ["OS", "WS"])
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(64, 128, 128), (33, 200, 72), (1, 640, 8)],  # aligned + ragged tails
+)
+def test_qgemm_ragged_and_dataflows_bit_exact(m, k, n, dataflow):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    b = jnp.asarray(rng.integers(-1000, 1000, (n,)), jnp.int32)
+    cfg = GemmKernelConfig(
+        block_m=32, block_k=128, block_n=128, dataflow=dataflow,
+        acc_dtype="int32", out_dtype="int8", requant_scale=2.0**-6,
+        clip_lo=-128, clip_hi=127, interpret=True,
+    )
+    out = ops.qmatmul(x, w, b, cfg)
+    expect = ref.qgemm_ref(x, w, b, requant_scale=2.0**-6)
+    assert np.array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("clip_lo,clip_hi", [(-128, 127), (0, 127), (-32, 31)])
+def test_qgemm_clip_windows_bit_exact(clip_lo, clip_hi):
+    """Asymmetric clip windows (relu6-style fused activations express as
+    clip bounds on the quantized path)."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.integers(-128, 128, (64, 256)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (256, 128)), jnp.int8)
+    cfg = GemmKernelConfig(
+        block_m=64, block_k=128, block_n=128, acc_dtype="int32",
+        out_dtype="int8", requant_scale=0.25, clip_lo=clip_lo,
+        clip_hi=clip_hi, interpret=True,
+    )
+    out = ops.qmatmul(x, w, None, cfg)
+    expect = ref.qgemm_ref(
+        x, w, None, requant_scale=0.25, clip_lo=clip_lo, clip_hi=clip_hi
+    )
+    assert np.array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_qgemm_without_bias_or_requant_returns_acc():
+    """acc_dtype=int32 with no requant epilogue: the kernel returns the
+    raw int32 accumulator (the raw-dense path of the executor)."""
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.integers(-128, 128, (40, 130)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (130, 72)), jnp.int8)
+    cfg = GemmKernelConfig(
+        block_m=32, block_k=128, block_n=128, acc_dtype="int32",
+        out_dtype="int32", interpret=True,
+    )
+    out = ops.matmul(x, w, cfg)
+    expect = np.asarray(x, np.int32) @ np.asarray(w, np.int32)
+    assert np.array_equal(np.asarray(out), expect)
+
+
 def test_scheduled_config_from_backend():
     """The mapping generator's BlockSpecs derive from the CoSA schedule and
     respect VMEM + Eq.(1)."""

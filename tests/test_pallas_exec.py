@@ -1,0 +1,186 @@
+"""Measured Pallas execution: kernel-path parity with the emulated
+executors, schedule-derived kernel configs, and measured DSE
+(``CompileOptions(measure_top_k=K)``) including the warm-boot
+zero-work guarantee.
+
+Everything here runs the kernels in interpret mode (CPU CI); on a TPU
+host the same dispatch path compiles through Mosaic (see
+``repro.core.lowering.pallas_interpret_mode``).
+"""
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import CompileOptions, Target
+from repro.core import ir, zoo
+from repro.core.lowering import pallas_interpret_mode
+
+
+def _assert_outputs_match(got, want, context: str):
+    got, want = np.asarray(got), np.asarray(want)
+    assert got.shape == want.shape and got.dtype == want.dtype, context
+    if np.issubdtype(got.dtype, np.integer):
+        np.testing.assert_array_equal(got, want, err_msg=context)
+    else:
+        np.testing.assert_allclose(
+            got, want, rtol=1e-4, atol=1e-4, err_msg=context
+        )
+
+
+def test_interpret_mode_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert pallas_interpret_mode() is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert pallas_interpret_mode() is False
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    import jax
+
+    assert pallas_interpret_mode() is (jax.default_backend() != "tpu")
+
+
+# -- kernel dispatch parity: pallas vs emulated, across the zoo ---------------
+
+
+@pytest.mark.parametrize(
+    "name", ("mlp_tiny", "qcnn", "toycar_mlp", "transformer_block")
+)
+@pytest.mark.parametrize("mode", ("optimized", "baseline"))
+def test_zoo_pallas_matches_emulated(name, mode):
+    """Same graph, same schedules — the Pallas kernel path must agree with
+    the emulated tiled-loop executors bit-exactly (int8 zoo models)."""
+    model = zoo.get_model(name)
+    feeds = model.feeds(seed=3)
+    for acc in model.accelerators:
+        if acc.startswith("tpu"):
+            continue  # tpu desc takes the pallas path in both compiles
+        emulated = repro.compile(
+            model.build(), Target(acc, mode=mode, cache=False)
+        ).run(feeds)
+        pallas = repro.compile(
+            model.build(), Target(acc, mode=mode, cache=False, use_pallas=True)
+        ).run(feeds)
+        for p, e in zip(pallas, emulated):
+            _assert_outputs_match(p, e, f"{name}/{acc}/{mode}")
+
+
+def test_batched_pallas_run_many_matches_emulated():
+    """The PR-5 bucketed serving path stays bit-exact through the kernel
+    dispatch (3-D batched dense lowers to the per-instance kernel loop)."""
+    model = zoo.get_model("mlp_tiny")
+    traffic = [model.feeds(seed=s) for s in range(5)]
+    kwargs = dict(options=CompileOptions(batch_buckets=(1, 4)))
+    emulated = repro.compile(
+        "mlp_tiny", Target("gemmini", cache=False), **kwargs
+    ).run_many(traffic)
+    pallas = repro.compile(
+        "mlp_tiny", Target("gemmini", cache=False, use_pallas=True), **kwargs
+    ).run_many(traffic)
+    for outs_p, outs_e in zip(pallas, emulated):
+        for p, e in zip(outs_p, outs_e):
+            _assert_outputs_match(p, e, "mlp_tiny batched")
+
+
+def test_transformer_block_pallas_bmm_parity():
+    """Attention scores/context are activation-activation batched matmuls —
+    the kernel path replays the per-sample GEMM per batch instance."""
+    model = zoo.get_model("transformer_block")
+    feeds = model.feeds(seed=1)
+    emulated = repro.compile(
+        model.build(), Target("gemmini", cache=False)
+    ).run(feeds)
+    pallas = repro.compile(
+        model.build(), Target("gemmini", cache=False, use_pallas=True)
+    ).run(feeds)
+    for p, e in zip(pallas, emulated):
+        _assert_outputs_match(p, e, "transformer_block/gemmini")
+
+
+# -- measured DSE: top-K timing + warm-boot zero-work -------------------------
+
+
+def _qdense_graph():
+    rng = np.random.default_rng(0)
+    w = rng.integers(-8, 8, size=(64, 48)).astype(np.int8)
+    b = rng.integers(-64, 64, size=(48,)).astype(np.int32)
+    x = ir.input_((8, 64), "int8", name="x")
+    h = ir.bias_add(ir.dense(x, ir.const(w)), ir.const(b))
+    h = ir.clip(ir.requantize(h, scale=2.0**-6), lo=-128, hi=127)
+    return ir.Graph([h], name="measured_dse_probe")
+
+
+def test_measured_dse_picks_winner_and_stays_correct(tmp_path):
+    feeds = {"x": np.random.default_rng(1).integers(-16, 16, (8, 64)).astype(np.int8)}
+    want = ir.execute_graph(_qdense_graph(), feeds)[0]
+    module = repro.compile(
+        _qdense_graph(),
+        Target("gemmini", cache_dir=str(tmp_path)),
+        options=CompileOptions(measure_top_k=3, fresh_backend=True),
+    )
+    backend = module.backend
+    assert backend.n_measurements > 0
+    assert backend.scheduler.n_solver_calls > 0
+    _assert_outputs_match(module.run(feeds)[0], want, "measured winner")
+    # the measurement record rides along with the cached schedule
+    (node,) = [n for n in module.graph.toposort() if n.target == "accel"]
+    sr = backend._schedule_for(node, "proposed", 3)
+    assert sr.measured is not None
+    assert sr.measured["k"] == len(sr.measured["latencies_s"])
+    assert sr.measured["winner"] == int(np.argmin(sr.measured["latencies_s"]))
+
+
+def test_measured_dse_warm_boot_does_zero_work(tmp_path):
+    """The acceptance criterion: recompiling with the same ``measure_top_k``
+    against a warm cache performs NO candidate sweeps and NO wall-clock
+    measurements — and a later modeled-only compile is warm too (the
+    modeled ranking was cached en route to the measured key)."""
+    target = Target("gemmini", cache_dir=str(tmp_path))
+    opts = CompileOptions(measure_top_k=2, fresh_backend=True)
+    cold = repro.compile(_qdense_graph(), target, options=opts)
+    assert cold.backend.n_measurements > 0
+
+    warm = repro.compile(_qdense_graph(), target, options=opts)
+    assert warm.backend is not cold.backend
+    assert warm.backend.n_measurements == 0
+    assert warm.backend.scheduler.n_solver_calls == 0
+
+    modeled = repro.compile(
+        _qdense_graph(), target, options=CompileOptions(fresh_backend=True)
+    )
+    assert modeled.backend.scheduler.n_solver_calls == 0
+
+
+def test_measured_and_modeled_cache_keys_are_distinct(tmp_path):
+    """measure_top_k=K results live under their own cache key: a modeled
+    compile must never be served a measured entry and vice versa."""
+    from repro.core.schedule_cache import ScheduleCache
+    from repro.core.strategy import workload_from_node
+
+    target = Target("gemmini", cache_dir=str(tmp_path))
+    module = repro.compile(
+        _qdense_graph(), target,
+        options=CompileOptions(measure_top_k=2, fresh_backend=True),
+    )
+    (node,) = [n for n in module.graph.toposort() if n.target == "accel"]
+    wl = workload_from_node(node)
+    fp = module.backend.desc.fingerprint()
+    solver = module.backend.scheduler.solver_id()
+    modeled_key = ScheduleCache.key_for(wl, fp, "proposed", solver=solver)
+    measured_key = ScheduleCache.key_for(
+        wl, fp, "proposed", solver=solver, selector="measured2"
+    )
+    assert modeled_key != measured_key
+    cache = module.backend.schedule_cache
+    assert cache.get(measured_key) is not None
+    assert cache.get(measured_key).measured is not None
+    assert cache.get(modeled_key) is not None
+    assert cache.get(modeled_key).measured is None
+
+
+def test_measure_top_k_validation():
+    with pytest.raises(ValueError):
+        CompileOptions(measure_top_k=0)
+    with pytest.raises(ValueError):
+        CompileOptions(measure_top_k=-3)
+    with pytest.raises(ValueError):
+        CompileOptions(measure_top_k=2.5)

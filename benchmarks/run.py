@@ -10,6 +10,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        coldstart_bench,
         integration_bench,
         kernels_bench,
         roofline,
@@ -66,6 +67,19 @@ def main() -> None:
             (time.perf_counter() - t0) * 1e6,
             f"cells={len(serving['rows'])};"
             f"best_speedup={serving['summary']['best_speedup_req_s']:.2f}x",
+        )
+    )
+
+    # -- cold start: AOT artifact load vs full compile ------------------------
+    t0 = time.perf_counter()
+    cold = coldstart_bench.main(["--smoke"])
+    csv_rows.append(
+        (
+            "coldstart_artifact_vs_compile",
+            (time.perf_counter() - t0) * 1e6,
+            f"cells={len(cold['rows'])};"
+            f"best_load_speedup={cold['summary']['best_load_speedup']:.1f}x;"
+            f"best_overlap_speedup={cold['summary']['best_overlap_speedup']:.2f}x",
         )
     )
 

@@ -38,8 +38,11 @@ from repro.api import (
     backend_for,
     clear_backend_cache,
     compile,
+    load,
+    save,
 )
 from repro.core.accel import AcceleratorDescription
+from repro.core.artifact import ArtifactError
 from repro.core.arch_spec import ArchSpec, GemmWorkload, conv2d_as_gemm
 from repro.core.batching import BatchedModule
 from repro.core.deprecation import ReproDeprecationWarning
@@ -62,6 +65,7 @@ __all__ = [
     "AcceleratorDescription",
     "AcceleratorRegistry",
     "ArchSpec",
+    "ArtifactError",
     "BatchedModule",
     "CapabilityError",
     "CompileOptions",
@@ -82,7 +86,9 @@ __all__ = [
     "conv2d_as_gemm",
     "default_cache_dir",
     "integrate",
+    "load",
     "register_accelerator",
+    "save",
     "trace_model",
     "validate_description",
     "__version__",

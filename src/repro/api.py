@@ -190,6 +190,15 @@ class CompileOptions:
     #: key, so warm recompiles do zero sweeps AND zero re-measurement.
     #: None (default) keeps the pure cycle-model argmin.
     measure_top_k: int | None = None
+    #: transparent AOT write-through: probe a content-addressed
+    #: ``ArtifactStore`` rooted here before compiling (keyed by source
+    #: graph fingerprint, arch fingerprint, mode, pallas, bucket, schema
+    #: version) and persist the compiled module after.  A hit restores the
+    #: full module — plan, schedules, pass report, constants — with zero
+    #: DSE sweeps, zero measurements, and zero rewrite fires.  Ignored when
+    #: ``passes`` overrides the per-mode pipeline (custom pipelines are not
+    #: part of the key).  See also ``repro.save`` / ``repro.load``.
+    artifact_dir: str | Path | None = None
 
     def __post_init__(self):
         k = self.measure_top_k
@@ -424,8 +433,33 @@ def compile(
     else:
         reference, build = _batched_graph_builder(model, example_inputs, params)
     backend = backend_for(target, fresh=options.fresh_backend)
+    store = None
+    if options.artifact_dir is not None and options.passes is None:
+        from repro.core.artifact import ArtifactStore
 
-    def compile_graph(graph):
+        store = ArtifactStore(Path(options.artifact_dir))
+
+    def compile_graph(graph, bucket=None):
+        key = src_fp = None
+        if store is not None:
+            # key by the PRE-pipeline graph (what the caller hands us);
+            # the passes mutate it in place during compile
+            from repro.core.artifact import graph_fingerprint
+
+            src_fp = graph_fingerprint(graph)
+            key = store.key_for(
+                source_fingerprint=src_fp,
+                arch_fingerprint=backend.desc.fingerprint(),
+                mode=target.internal_mode,
+                use_pallas=target.use_pallas,
+                bucket=bucket,
+                measure_top_k=options.measure_top_k,
+            )
+            cached = store.get(key, desc=backend.desc)
+            if cached is not None:
+                if not options.allow_host_fallback:
+                    _check_offload(cached)
+                return cached
         module = backend.compile_graph(
             graph,
             mode=target.internal_mode,
@@ -435,6 +469,8 @@ def compile(
         )
         if not options.allow_host_fallback:
             _check_offload(module)
+        if store is not None:
+            store.put(key, module, source_fingerprint=src_fp)
         return module
 
     if buckets is None:
@@ -442,7 +478,37 @@ def compile(
 
     inputs, outputs = io_specs_from_graph(reference)
     return BatchedModule(
-        modules={b: compile_graph(build(b)) for b in buckets},
+        modules={b: compile_graph(build(b), bucket=b) for b in buckets},
         inputs=inputs,
         outputs=outputs,
     )
+
+
+def save(module, path):
+    """Serialize a compiled module (or bucketed ``BatchedModule``) into an
+    AOT artifact directory at ``path``.
+
+    The artifact holds everything ``compile()`` produced — the optimized
+    graph, per-node schedules (measured-DSE winners included), the
+    pass-pipeline report, constant panels/weights, kernel configs, and the
+    ExecutionPlan skeleton — versioned and content-verified, written
+    atomically.  ``repro.load(path)`` restores it with zero DSE sweeps,
+    zero measurements, and zero rewrite-rule fires.  See
+    ``repro.core.artifact`` for the layout."""
+    from repro.core.artifact import save_any
+
+    return save_any(module, path)
+
+
+def load(path):
+    """Restore a compiled module from an AOT artifact written by
+    ``repro.save`` (or by ``CompileOptions(artifact_dir=...)``
+    write-through).
+
+    Raises ``ArtifactError`` naming the mismatch if the artifact is torn
+    or was built for a different schema version, architecture, or graph.
+    The accelerator the artifact targets must be registered in this
+    process (built-ins always are)."""
+    from repro.core.artifact import load_any
+
+    return load_any(path)

@@ -55,17 +55,7 @@ def make_accel_executor(
     use_pallas: bool = False,
 ) -> Callable:
     attrs = node.attrs
-    # ONE resolved flag: an explicit node attr wins (legalization sets
-    # quantized=False on float fused ops), otherwise the bound core
-    # compute decides.  The fused requantize/clip epilogue exists only
-    # on generalized (legalized) ops — a raw dense/conv in naive mode
-    # keeps its epilogue as separate graph nodes — and a quantized
-    # generalized op must carry the epilogue parameters.
-    node_flag = attrs.get("quantized")
-    quantized = bool(
-        strategy.compute.quantized if node_flag is None else node_flag
-    )
-    fused_epilogue = quantized and node.op.startswith("generalized")
+    fused_epilogue = resolved_fused_epilogue(node, strategy)
     if fused_epilogue:
         missing = [
             k
@@ -91,6 +81,52 @@ def make_accel_executor(
         )
     return _make_gemmini_executor(
         desc, mapping_gen, intrinsic_gen, node, strategy, fused_epilogue
+    )
+
+
+def resolved_fused_epilogue(node: Node, strategy: Strategy) -> bool:
+    """ONE resolved fused-epilogue flag: an explicit node attr wins
+    (legalization sets quantized=False on float fused ops), otherwise the
+    bound core compute decides.  The fused requantize/clip epilogue exists
+    only on generalized (legalized) ops — a raw dense/conv in naive mode
+    keeps its epilogue as separate graph nodes."""
+    node_flag = node.attrs.get("quantized")
+    quantized = bool(
+        strategy.compute.quantized if node_flag is None else node_flag
+    )
+    return quantized and node.op.startswith("generalized")
+
+
+def kernel_config_for(
+    desc: AcceleratorDescription,
+    mapping_gen: MappingGenerator,
+    node: Node,
+    strategy: Strategy,
+):
+    """Derive the schedule-determined Pallas kernel config for one
+    accelerator step — the single derivation ``_make_pallas_executor``
+    binds and the AOT artifact manifest records.  ``interpret`` reflects
+    the *current* execution environment (it is a runtime property, not
+    part of the compiled schedule)."""
+    attrs = node.attrs
+    fused_quant = resolved_fused_epilogue(node, strategy)
+    int_acc = np.issubdtype(np.dtype(node.inputs[0].dtype), np.integer)
+    if fused_quant:
+        epilogue = {
+            "requant_scale": attrs["requant_scale"],
+            "clip_lo": attrs["clip_lo"],
+            "clip_hi": attrs["clip_hi"],
+        }
+    else:
+        epilogue = {"activation": attrs.get("activation")}
+    out_dtype = node.dtype
+    return mapping_gen.to_kernel_config(
+        strategy.schedule,
+        acc_dtype="int32" if (fused_quant or int_acc) else "float32",
+        out_dtype=out_dtype if out_dtype != "float64" else "float32",
+        epilogue=epilogue,
+        interpret=pallas_interpret_mode(),
+        has_bias=len(node.inputs) > 2 and node.inputs[2] is not None,
     )
 
 
@@ -388,26 +424,10 @@ def _make_pallas_executor(
     pool = attrs.get("pool")
     out_shape, out_dtype = node.shape, node.dtype
     pre_shape = tuple(pool["conv_shape"]) if pool else out_shape
-    int_acc = np.issubdtype(np.dtype(node.inputs[0].dtype), np.integer)
     # mirror the emulated ``_epilogue`` selection exactly: the fused
     # requantize/clip only fires on resolved-quantized generalized ops;
     # everything else gets at most an activation.
-    if fused_quant:
-        epilogue = {
-            "requant_scale": attrs["requant_scale"],
-            "clip_lo": attrs["clip_lo"],
-            "clip_hi": attrs["clip_hi"],
-        }
-    else:
-        epilogue = {"activation": attrs.get("activation")}
-    cfg = mapping_gen.to_kernel_config(
-        strategy.schedule,
-        acc_dtype="int32" if (fused_quant or int_acc) else "float32",
-        out_dtype=out_dtype if out_dtype != "float64" else "float32",
-        epilogue=epilogue,
-        interpret=pallas_interpret_mode(),
-        has_bias=len(node.inputs) > 2 and node.inputs[2] is not None,
-    )
+    cfg = kernel_config_for(desc, mapping_gen, node, strategy)
 
     def _run2d(x_j, w_j, b_j):
         if fused_quant:

@@ -38,6 +38,7 @@ imports stay valid.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
+from typing import Callable
 
 from repro.core.executor import (  # noqa: F401  (re-exported surface)
     FREE_VIEW_OPS,
@@ -174,15 +175,7 @@ class CompilerBackend:
                 n_infeasible=modeled.n_infeasible,
             )
             strat = self.strategy_gen.generate(node, sr)
-            ex = make_accel_executor(
-                self.desc,
-                self.mapping_gen,
-                self.intrinsic_gen,
-                node,
-                strat,
-                use_pallas=self.use_pallas,
-            )
-            latencies.append(time_executor(ex, args))
+            latencies.append(time_executor(self.executor_for(node, strat), args))
             self.n_measurements += 1
         winner = min(range(len(latencies)), key=latencies.__getitem__)
         best, report = cands[winner]
@@ -198,6 +191,20 @@ class CompilerBackend:
                 "latencies_s": latencies,
                 "modeled_cycles": [r.total_cycles for _, r in cands],
             },
+        )
+
+    # -- stage 3: backend lowering ------------------------------------------
+    def executor_for(self, node: Node, strategy) -> Callable:
+        """Lower one (node, strategy) to its executable kernel — the single
+        spelling used by compile, measured DSE, and artifact restore (which
+        rebuilds executors from persisted schedules with zero DSE)."""
+        return make_accel_executor(
+            self.desc,
+            self.mapping_gen,
+            self.intrinsic_gen,
+            node,
+            strategy,
+            use_pallas=self.use_pallas,
         )
 
     def _schedule_uncached(self, wl, mode: str) -> ScheduleResult:
@@ -276,16 +283,7 @@ class CompilerBackend:
             sr = self._schedule_for(n, mode, measure_top_k)
             strat = self.strategy_gen.generate(n, sr)
             module.ops[n] = CompiledOp(
-                node=n,
-                strategy=strat,
-                executor=make_accel_executor(
-                    self.desc,
-                    self.mapping_gen,
-                    self.intrinsic_gen,
-                    n,
-                    strat,
-                    use_pallas=self.use_pallas,
-                ),
+                node=n, strategy=strat, executor=self.executor_for(n, strat)
             )
         if self.schedule_cache is not None:
             self.schedule_cache.flush()

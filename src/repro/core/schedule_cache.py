@@ -16,12 +16,20 @@ editing an accelerator description invalidates its entries automatically.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
+import tempfile
 import threading
 from dataclasses import dataclass, field
 from pathlib import Path
+
+try:
+    import fcntl
+except ImportError:  # non-POSIX: fall back to atomic replace only
+    fcntl = None
+
 
 from repro.core.accel import AcceleratorDescription
 from repro.core.arch_spec import GemmWorkload
@@ -31,6 +39,30 @@ from repro.core.simulator import SimReport
 
 CACHE_FORMAT_VERSION = 1
 _CACHE_FILE = "schedules.json"
+
+
+@contextlib.contextmanager
+def _writer_lock(cache_file: Path):
+    """Advisory cross-process lock around a cache-file read-merge-write
+    (sidecar ``<file>.lock``).  Degrades to a no-op where ``flock`` is
+    unavailable or the lock file cannot be created — writes then rely on
+    atomic replace alone (never torn, possibly losing a merge race)."""
+    if fcntl is None:
+        yield
+        return
+    lock_path = cache_file.with_name(cache_file.name + ".lock")
+    try:
+        fd = os.open(lock_path, os.O_CREAT | os.O_RDWR, 0o644)
+    except OSError:
+        yield
+        return
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        yield
+    finally:
+        with contextlib.suppress(OSError):
+            fcntl.flock(fd, fcntl.LOCK_UN)
+        os.close(fd)
 
 
 def default_cache_dir() -> Path:
@@ -211,20 +243,38 @@ class ScheduleCache:
         f = self.file
         assert f is not None
         f.parent.mkdir(parents=True, exist_ok=True)
-        # merge with whatever is on disk (raw, no deserialization) so
-        # concurrent processes sharing the cache dir don't drop each
-        # other's entries; our entries win on key collision.  clear()
-        # passes merge=False so the disk tier is actually emptied.
-        entries: dict = {}
-        if merge:
+        # Serialize the read-merge-write against every other writer of this
+        # cache dir (other processes AND other ScheduleCache instances in
+        # this process — a pid-suffixed tmp name is NOT unique across
+        # threads) with an advisory lock on a sidecar file.  Where flock is
+        # unavailable the atomic tmp+replace below still guarantees the
+        # file is never torn; at worst a concurrent writer's entries lose
+        # the replace race.
+        with _writer_lock(f):
+            # merge with whatever is on disk (raw, no deserialization) so
+            # concurrent writers sharing the cache dir don't drop each
+            # other's entries; our entries win on key collision.  clear()
+            # passes merge=False so the disk tier is actually emptied.
+            entries: dict = {}
+            if merge:
+                try:
+                    prior = json.loads(f.read_text())
+                    if prior.get("version") == CACHE_FORMAT_VERSION:
+                        entries = dict(prior.get("entries", {}))
+                except (OSError, ValueError):
+                    pass
+            entries.update(
+                (k, result_to_dict(v)) for k, v in self._mem.items()
+            )
+            payload = {"version": CACHE_FORMAT_VERSION, "entries": entries}
+            fd, tmp_name = tempfile.mkstemp(
+                prefix=f.name + ".tmp.", dir=f.parent
+            )
             try:
-                prior = json.loads(f.read_text())
-                if prior.get("version") == CACHE_FORMAT_VERSION:
-                    entries = dict(prior.get("entries", {}))
-            except (OSError, ValueError):
-                pass
-        entries.update((k, result_to_dict(v)) for k, v in self._mem.items())
-        payload = {"version": CACHE_FORMAT_VERSION, "entries": entries}
-        tmp = f.with_suffix(f".tmp.{os.getpid()}")
-        tmp.write_text(json.dumps(payload))
-        tmp.replace(f)
+                with os.fdopen(fd, "w") as out:
+                    out.write(json.dumps(payload))
+                os.replace(tmp_name, f)
+            except BaseException:
+                with contextlib.suppress(OSError):
+                    os.unlink(tmp_name)
+                raise

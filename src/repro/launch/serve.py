@@ -34,15 +34,37 @@ def serve_zoo(args) -> None:
 
     model = get_model(args.zoo)
     target = repro.Target.parse(args.target, batch_size=args.batch)
-    # batch_size=1 compiles the classic single-shape module; the serving
-    # loop always wants the batched surface, so pin an explicit unit bucket
-    options = (
-        repro.CompileOptions(batch_buckets=(1,)) if args.batch <= 1 else None
-    )
-    t0 = time.perf_counter()
-    module = repro.compile(args.zoo, target, options=options)
-    t_compile = time.perf_counter() - t0
+    artifact = getattr(args, "artifact", None)
+    if artifact:
+        # AOT boot: restore the batched module from a saved artifact — no
+        # compile, no DSE, no pass pipeline at startup
+        t0 = time.perf_counter()
+        module = repro.load(artifact)
+        t_boot = time.perf_counter() - t0
+        if not isinstance(module, repro.BatchedModule):
+            raise SystemExit(
+                f"--artifact {artifact} holds a single-shape module; the "
+                f"serving loop needs a batched artifact (save a module "
+                f"compiled with batch_buckets / Target(batch_size=...))"
+            )
+        boot_how = "loaded artifact"
+    else:
+        # batch_size=1 compiles the classic single-shape module; the
+        # serving loop always wants the batched surface, so pin an
+        # explicit unit bucket
+        options = (
+            repro.CompileOptions(batch_buckets=(1,))
+            if args.batch <= 1
+            else None
+        )
+        t0 = time.perf_counter()
+        module = repro.compile(args.zoo, target, options=options)
+        t_boot = time.perf_counter() - t0
+        boot_how = "compiled"
     buckets = module.bucket_sizes()
+    if getattr(args, "save_artifact", None):
+        repro.save(module, args.save_artifact)
+        print(f"[serve] saved compile artifact to {args.save_artifact}")
 
     # warmup: run every bucket once (full chunks, so each bucket's plan,
     # arena, and executor scratch are touched) — the measured window never
@@ -68,9 +90,9 @@ def serve_zoo(args) -> None:
     n = max(len(outs), 1)
     cycles = module.modeled_cycles()  # largest bucket's plan
     print(
-        f"[serve] {model.name} on {target.describe()}: compiled "
+        f"[serve] {model.name} on {target.describe()}: {boot_how} "
         f"{len(buckets)} bucket plans {list(buckets)} in "
-        f"{t_compile * 1e3:.1f} ms"
+        f"{t_boot * 1e3:.1f} ms (cold start)"
     )
     print(
         f"[serve] {n} requests in {dt:.3f}s ({n / dt:.0f} req/s); latency "
@@ -134,6 +156,16 @@ def main():
         "--target",
         default="gemmini:optimized",
         help="accelerator[:mode] for --zoo (Target.parse syntax)",
+    )
+    ap.add_argument(
+        "--artifact",
+        help="boot --zoo serving from a saved AOT compile artifact "
+        "(repro.load) instead of compiling at startup",
+    )
+    ap.add_argument(
+        "--save-artifact",
+        help="after boot, save the (batched) compiled module as an AOT "
+        "artifact at this path (repro.save)",
     )
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=16)

@@ -1,0 +1,293 @@
+"""AOT compile artifacts: ``repro.save`` / ``repro.load`` round trips,
+the zero-work cold-start guarantee (no DSE, no measurements, no rewrite
+fires), content-addressed write-through, and invalidation on graph /
+architecture / schema mismatch."""
+
+import json
+
+import numpy as np
+import pytest
+
+import repro
+import repro.core.pass_manager as pass_manager
+from repro.core.artifact import (
+    SCHEMA_VERSION,
+    ArtifactStore,
+    graph_fingerprint,
+)
+from repro.core.zoo import ZOO, get_model
+
+
+def _assert_bit_exact(reference, restored, feeds):
+    a, b = reference.run(feeds), restored.run(feeds)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(x, y)
+
+
+class _NoPasses:
+    """Context manager asserting the pass manager never runs inside it —
+    the load path must perform zero rewrite-rule fires by construction."""
+
+    def __enter__(self):
+        self._orig = pass_manager.PassManager.run
+
+        def forbidden(self_pm, graph, ctx=None):
+            raise AssertionError(
+                "PassManager.run fired during artifact load"
+            )
+
+        pass_manager.PassManager.run = forbidden
+        return self
+
+    def __exit__(self, *exc):
+        pass_manager.PassManager.run = self._orig
+        return False
+
+
+def _assert_zero_work(module):
+    """A module restored from an artifact has a fresh backend whose
+    counters prove no DSE sweep or measurement happened."""
+    assert module.backend is not None
+    assert module.backend.scheduler.n_solver_calls == 0
+    assert module.backend.n_measurements == 0
+
+
+# -- the full matrix: every zoo model x accelerator x mode -------------------
+
+MATRIX = [
+    (name, accel, mode)
+    for name in sorted(ZOO)
+    for accel in get_model(name).accelerators
+    if accel in ("gemmini", "edge_npu")
+    for mode in ("naive", "baseline", "optimized")
+]
+
+
+@pytest.mark.parametrize("name,accel,mode", MATRIX)
+def test_roundtrip_bit_exact_with_zero_work(name, accel, mode, tmp_path):
+    module = repro.compile(name, repro.Target(accel, mode=mode, cache=False))
+    path = tmp_path / "art"
+    repro.save(module, path)
+    with _NoPasses():
+        restored = repro.load(path)
+    _assert_zero_work(restored)
+    _assert_bit_exact(module, restored, get_model(name).feeds(seed=7))
+    # the restored pass report survives too (what the optimizer did is
+    # still one attribute away on a cold-booted replica)
+    assert restored.pass_report is not None
+    assert restored.pass_report.rewrites_by_pass() == (
+        module.pass_report.rewrites_by_pass()
+    )
+    assert restored.modeled_cycles() == module.modeled_cycles()
+
+
+def test_roundtrip_pallas_execution_backend(tmp_path):
+    module = repro.compile(
+        "qcnn", repro.Target("gemmini", use_pallas=True, cache=False)
+    )
+    path = tmp_path / "art"
+    repro.save(module, path)
+    with _NoPasses():
+        restored = repro.load(path)
+    _assert_zero_work(restored)
+    assert restored.backend.use_pallas
+    _assert_bit_exact(module, restored, get_model("qcnn").feeds(seed=1))
+    manifest = json.loads((path / "manifest.json").read_text())
+    assert manifest["use_pallas"] is True
+    # schedule-derived kernel configs ride along for introspection
+    assert len(manifest["kernel_configs"]) == len(module.ops)
+
+
+def test_roundtrip_batched_buckets(tmp_path):
+    module = repro.compile(
+        "mlp_tiny",
+        repro.Target("gemmini", cache=False),
+        options=repro.CompileOptions(batch_buckets=(1, 4)),
+    )
+    path = tmp_path / "art"
+    repro.save(module, path)
+    with _NoPasses():
+        restored = repro.load(path)
+    assert isinstance(restored, repro.BatchedModule)
+    assert restored.bucket_sizes() == (1, 4)
+    for b in restored.bucket_sizes():
+        _assert_zero_work(restored.bucket_module(b))
+    model = get_model("mlp_tiny")
+    traffic = [model.feeds(seed=s) for s in range(7)]
+    for a, b in zip(module.run_many(traffic), restored.run_many(traffic)):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_roundtrip_measured_dse_winner_persists(tmp_path):
+    module = repro.compile(
+        "mlp_tiny",
+        repro.Target("gemmini", cache=False),
+        options=repro.CompileOptions(measure_top_k=2, fresh_backend=True),
+    )
+    assert module.backend.n_measurements > 0
+    repro.save(module, tmp_path / "art")
+    restored = repro.load(tmp_path / "art")
+    _assert_zero_work(restored)  # the measured winner is baked in
+    for op in restored.ops.values():
+        assert op.strategy.schedule_result.measured is not None
+    _assert_bit_exact(module, restored, get_model("mlp_tiny").feeds(seed=0))
+
+
+# -- invalidation -------------------------------------------------------------
+
+
+def test_load_missing_path_is_a_clear_error(tmp_path):
+    with pytest.raises(repro.ArtifactError, match="no compile artifact"):
+        repro.load(tmp_path / "nope")
+
+
+def test_schema_version_mismatch_invalidates(tmp_path):
+    module = repro.compile("mlp_tiny", repro.Target("gemmini", cache=False))
+    path = repro.save(module, tmp_path / "art")
+    man = json.loads((path / "manifest.json").read_text())
+    man["schema_version"] = SCHEMA_VERSION + 1
+    (path / "manifest.json").write_text(json.dumps(man))
+    with pytest.raises(repro.ArtifactError, match="schema version"):
+        repro.load(path)
+
+
+def test_arch_fingerprint_mismatch_invalidates(tmp_path):
+    module = repro.compile("mlp_tiny", repro.Target("gemmini", cache=False))
+    path = repro.save(module, tmp_path / "art")
+    man = json.loads((path / "manifest.json").read_text())
+    man["arch_fingerprint"] = "0" * 16
+    (path / "manifest.json").write_text(json.dumps(man))
+    with pytest.raises(
+        repro.ArtifactError, match="architecture fingerprint"
+    ):
+        repro.load(path)
+
+
+def test_torn_arrays_write_invalidates(tmp_path):
+    module = repro.compile("mlp_tiny", repro.Target("gemmini", cache=False))
+    path = repro.save(module, tmp_path / "art")
+    data = (path / "arrays.npz").read_bytes()
+    (path / "arrays.npz").write_bytes(data[: len(data) // 2])
+    with pytest.raises(repro.ArtifactError, match="content verification"):
+        repro.load(path)
+
+
+def test_tampered_graph_invalidates(tmp_path):
+    module = repro.compile("mlp_tiny", repro.Target("gemmini", cache=False))
+    path = repro.save(module, tmp_path / "art")
+    man = json.loads((path / "manifest.json").read_text())
+    for nd in man["graph"]["nodes"]:
+        if nd["op"] not in ("input", "const"):
+            nd["dtype"] = "float64"
+            break
+    (path / "manifest.json").write_text(json.dumps(man))
+    with pytest.raises(repro.ArtifactError, match="graph verification"):
+        repro.load(path)
+
+
+def test_unregistered_accelerator_is_a_clear_error(tmp_path):
+    module = repro.compile("mlp_tiny", repro.Target("gemmini", cache=False))
+    path = repro.save(module, tmp_path / "art")
+    man = json.loads((path / "manifest.json").read_text())
+    man["accelerator"] = "ghost_npu"
+    (path / "manifest.json").write_text(json.dumps(man))
+    with pytest.raises(repro.ArtifactError, match="not registered"):
+        repro.load(path)
+
+
+def test_save_rejects_non_modules(tmp_path):
+    with pytest.raises(repro.ArtifactError, match="CompiledModule"):
+        repro.save({"not": "a module"}, tmp_path / "art")
+
+
+# -- fingerprints -------------------------------------------------------------
+
+
+def test_graph_fingerprint_is_stable_across_node_name_counters():
+    """Auto-generated node names come from a process-global counter;
+    tracing the same model twice must fingerprint identically."""
+    g1 = get_model("mlp_tiny").trace()
+    g2 = get_model("mlp_tiny").trace()
+    assert graph_fingerprint(g1) == graph_fingerprint(g2)
+    g3 = get_model("toycar_mlp").trace()
+    assert graph_fingerprint(g1) != graph_fingerprint(g3)
+
+
+def test_graph_fingerprint_covers_const_bytes():
+    g1 = get_model("mlp_tiny").trace()
+    g2 = get_model("mlp_tiny").trace()
+    for n in g2.toposort():
+        if n.op == "const" and n.value.size:
+            n.value = n.value.copy()
+            n.value.flat[0] += 1
+            break
+    assert graph_fingerprint(g1) != graph_fingerprint(g2)
+
+
+# -- the content-addressed store (compile write-through) ----------------------
+
+
+def test_compile_write_through_hits_with_zero_work(tmp_path):
+    opts = repro.CompileOptions(
+        artifact_dir=tmp_path / "store", fresh_backend=True
+    )
+    target = repro.Target("edge_npu", cache=False)
+    first = repro.compile("mlp_tiny", target, options=opts)
+    with _NoPasses():
+        second = repro.compile("mlp_tiny", target, options=opts)
+    _assert_zero_work(second)
+    _assert_bit_exact(first, second, get_model("mlp_tiny").feeds(seed=2))
+
+
+def test_write_through_keys_separate_modes_and_buckets(tmp_path):
+    store_dir = tmp_path / "store"
+    opts = repro.CompileOptions(artifact_dir=store_dir, fresh_backend=True)
+    repro.compile("mlp_tiny", repro.Target("gemmini", cache=False), options=opts)
+    repro.compile(
+        "mlp_tiny",
+        repro.Target("gemmini", mode="naive", cache=False),
+        options=opts,
+    )
+    entries = [p for p in store_dir.rglob("manifest.json")]
+    assert len(entries) == 2  # different modes -> different keys
+
+
+def test_corrupt_store_entry_is_a_miss_not_an_error(tmp_path):
+    store_dir = tmp_path / "store"
+    opts = repro.CompileOptions(artifact_dir=store_dir, fresh_backend=True)
+    target = repro.Target("gemmini", cache=False)
+    repro.compile("mlp_tiny", target, options=opts)
+    for npz in store_dir.rglob("arrays.npz"):
+        npz.write_bytes(b"torn")
+    with pytest.warns(RuntimeWarning, match="unusable compile artifact"):
+        module = repro.compile("mlp_tiny", target, options=opts)
+    _assert_bit_exact(
+        module,
+        repro.compile("mlp_tiny", target, options=opts),  # re-written entry
+        get_model("mlp_tiny").feeds(seed=4),
+    )
+
+
+def test_store_key_covers_schema_and_knobs():
+    base = dict(
+        source_fingerprint="f" * 64,
+        arch_fingerprint="a" * 16,
+        mode="proposed",
+        use_pallas=False,
+        bucket=None,
+        measure_top_k=None,
+    )
+    k0 = ArtifactStore.key_for(**base)
+    assert k0 == ArtifactStore.key_for(**base)  # deterministic
+    for change in (
+        dict(mode="naive"),
+        dict(use_pallas=True),
+        dict(bucket=4),
+        dict(measure_top_k=3),
+        dict(arch_fingerprint="b" * 16),
+        dict(source_fingerprint="0" * 64),
+    ):
+        assert ArtifactStore.key_for(**{**base, **change}) != k0

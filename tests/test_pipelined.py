@@ -1,0 +1,160 @@
+"""Pipelined (two-lane, double-buffered) execution: bit-exactness against
+the sequential plan loop on every zoo model, build-time stage assignment
+sanity, thread-pool safety, and deadlock-free exception propagation."""
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.zoo import ZOO, get_model
+
+MATRIX = [
+    (name, accel, mode)
+    for name in sorted(ZOO)
+    for accel in get_model(name).accelerators
+    if accel in ("gemmini", "edge_npu")
+    for mode in ("optimized", "naive")  # fused and host-op-heavy plans
+]
+
+
+def _compile(name, accel, mode="optimized"):
+    return repro.compile(name, repro.Target(accel, mode=mode, cache=False))
+
+
+@pytest.mark.parametrize("name,accel,mode", MATRIX)
+def test_pipelined_bit_exact_vs_sequential(name, accel, mode):
+    module = _compile(name, accel, mode)
+    model = get_model(name)
+    traffic = [model.feeds(seed=s) for s in range(5)]
+    sequential = module.run_many(traffic)
+    pipelined = module.run_many(traffic, pipelined=True)
+    assert len(pipelined) == len(sequential)
+    for a, b in zip(sequential, pipelined):
+        for x, y in zip(a, b):
+            assert x.dtype == y.dtype
+            np.testing.assert_array_equal(x, y)
+    # single-call surface too
+    for x, y in zip(module.run(traffic[0]), module.run(traffic[0], pipelined=True)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_stage_assignment_matches_offload_decisions():
+    module = _compile("qcnn", "gemmini", "baseline")
+    plan = module.finalize()
+    stages = plan.stage_assignment()
+    assert len(stages) == len(plan.steps)
+    offloaded = {n.name for n in module.ops}
+    for stage in stages:
+        expected = "accel" if stage["name"] in offloaded else "host"
+        assert stage["lane"] == expected
+        # the cross-lane watermark can never exceed the other lane's length
+        (waits_key,) = [k for k in stage if k.startswith("waits_")]
+        other = waits_key.removeprefix("waits_")
+        assert 0 <= stage[waits_key] <= plan.lane_sizes()[other]
+    sizes = plan.lane_sizes()
+    assert sizes["host"] + sizes["accel"] == len(plan.steps)
+    assert sizes["accel"] == len(module.ops)
+
+
+def test_pipelined_fully_fused_plan_has_empty_host_lane():
+    """mlp_tiny optimized fuses every epilogue: the host lane is empty and
+    the pipelined path must still work (sequential fallback, no thread)."""
+    module = _compile("mlp_tiny", "gemmini", "optimized")
+    assert module.finalize().lane_sizes()["host"] == 0
+    model = get_model("mlp_tiny")
+    traffic = [model.feeds(seed=s) for s in range(3)]
+    for a, b in zip(module.run_many(traffic), module.run_many(traffic, pipelined=True)):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_pipelined_requires_plan_execution():
+    module = _compile("mlp_tiny", "gemmini")
+    with pytest.raises(ValueError, match="use_plan"):
+        module.run(get_model("mlp_tiny").feeds(), use_plan=False, pipelined=True)
+
+
+def test_pipelined_under_thread_pool_is_bit_exact():
+    """One shared module, several concurrent pipelined run_many streams —
+    each stream spawns its own host-lane worker and arena pair."""
+    module = _compile("toycar_mlp", "edge_npu", "naive")
+    model = get_model("toycar_mlp")
+    streams = [[model.feeds(seed=10 * t + s) for s in range(4)] for t in range(4)]
+    expected = [module.run_many(tr) for tr in streams]
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        got = list(pool.map(lambda tr: module.run_many(tr, pipelined=True), streams))
+    for exp_stream, got_stream in zip(expected, got):
+        for a, b in zip(exp_stream, got_stream):
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(x, y)
+
+
+def _module_with_poisoned_accel_op(trip_after: int):
+    """A qcnn module whose first accelerator op raises once ``trip_after``
+    calls have gone through — rebuilt plan, so the poison is in the lane."""
+    module = _compile("qcnn", "gemmini", "baseline")
+    n = next(iter(module.ops))
+    orig = module.ops[n].executor
+    calls = [0]
+
+    def poisoned(*args):
+        calls[0] += 1
+        if calls[0] > trip_after:
+            raise RuntimeError("injected accel failure")
+        return orig(*args)
+
+    module.ops[n].executor = poisoned
+    module.plan = None  # force a plan rebuild with the poisoned executor
+    return module
+
+
+def test_accel_lane_failure_propagates_without_deadlock():
+    module = _module_with_poisoned_accel_op(trip_after=2)
+    model = get_model("qcnn")
+    traffic = [model.feeds(seed=s) for s in range(6)]
+    with pytest.raises(RuntimeError, match="injected accel failure"):
+        module.run_many(traffic, pipelined=True)
+    # the worker thread is gone, not parked on a queue
+    assert not [
+        t for t in threading.enumerate() if t.name == "repro-host-lane"
+    ]
+
+
+def test_host_lane_failure_propagates_without_deadlock():
+    module = _compile("qcnn", "gemmini", "baseline")
+    plan = module.finalize()
+    assert plan.lane_sizes()["host"] > 0
+    orig = plan.execute_lane
+    calls = [0]
+
+    def poisoned(arena, state, lane):
+        if lane == "host":
+            calls[0] += 1
+            if calls[0] > 1:
+                raise RuntimeError("injected host failure")
+        return orig(arena, state, lane)
+
+    plan.execute_lane = poisoned
+    model = get_model("qcnn")
+    traffic = [model.feeds(seed=s) for s in range(6)]
+    try:
+        with pytest.raises(RuntimeError, match="injected host failure"):
+            module.run_many(traffic, pipelined=True)
+    finally:
+        del plan.execute_lane  # restore the bound method
+    assert not [
+        t for t in threading.enumerate() if t.name == "repro-host-lane"
+    ]
+    # the module stays healthy after an aborted stream
+    out = module.run_many(traffic[:2], pipelined=True)
+    for a, b in zip(module.run_many(traffic[:2]), out):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_pipelined_empty_traffic():
+    module = _compile("mlp_tiny", "gemmini")
+    assert module.run_many([], pipelined=True) == []

@@ -4,6 +4,8 @@ a warm cache), parallel DSE parity, and the edge_npu proof-of-abstraction
 (a third accelerator registered purely through the public API, end-to-end
 in all three pipeline modes)."""
 
+import json
+
 import numpy as np
 import pytest
 
@@ -186,6 +188,38 @@ def test_cache_concurrent_writers_merge(tmp_path):
     merged = ScheduleCache(tmp_path)
     assert merged.get("key_a") is not None
     assert merged.get("key_b") is not None
+
+
+def test_cache_concurrent_writer_hammer(tmp_path):
+    """Many writers (own ScheduleCache instance each, shared dir) flushing
+    concurrently from a thread pool: every entry must survive and the file
+    must stay valid JSON — regression test for the torn-write / lost-merge
+    window the pid-suffixed tmp file had (identical tmp name across
+    threads of one process)."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    backend = repro.build_integrated_backend("edge_npu", cache=False)
+    result = backend.scheduler.schedule(GemmWorkload(N=16, C=8, K=8, name="h"))
+
+    n_writers, n_rounds = 8, 5
+
+    def hammer(writer: int) -> None:
+        cache = ScheduleCache(tmp_path)
+        for r in range(n_rounds):
+            cache.put(f"key_{writer}_{r}", result)
+            cache.flush()
+
+    with ThreadPoolExecutor(max_workers=n_writers) as pool:
+        list(pool.map(hammer, range(n_writers)))
+
+    merged = ScheduleCache(tmp_path)
+    assert len(merged) == n_writers * n_rounds
+    for w in range(n_writers):
+        for r in range(n_rounds):
+            assert merged.get(f"key_{w}_{r}") is not None
+    # no tmp litter left behind, and the file itself parses
+    assert not list(tmp_path.glob("*.tmp*"))
+    json.loads(merged.file.read_text())
 
 
 def test_cache_clear_empties_disk_tier(tmp_path):

@@ -142,3 +142,47 @@ def test_serve_zoo_single_fast_request_never_divides_by_zero(capsys):
     out = capsys.readouterr().out
     assert "1 requests" in out
     assert "inf" not in out and "nan" not in out
+
+
+def test_serve_zoo_boots_from_artifact_without_compiling(
+    batched_mlp, mlp_reference, tmp_path, capsys, monkeypatch
+):
+    """``--artifact`` boots the serving loop from a saved AOT artifact:
+    startup must never enter repro.compile, the startup banner must report
+    the artifact cold start, and served outputs stay correct."""
+    art = tmp_path / "mlp.artifact"
+    repro.save(batched_mlp, art)
+
+    def no_compile(*a, **k):
+        raise AssertionError("serve_zoo compiled despite --artifact")
+
+    monkeypatch.setattr(repro, "compile", no_compile)
+    serve_zoo(_serve_args(requests=6, artifact=str(art)))
+    out = capsys.readouterr().out
+    assert "loaded artifact" in out
+    assert "cold start" in out
+    assert "6 requests" in out
+    model = get_model("mlp_tiny")
+    expected = np.asarray(mlp_reference.run(model.feeds(seed=0))[0]).ravel()[:8]
+    assert str(expected) in out  # sample output line is the real result
+
+
+def test_serve_zoo_save_artifact_round_trips(tmp_path, capsys):
+    """``--save-artifact`` persists the compiled batched module; a second
+    serve boots from it and serves identical traffic."""
+    art = tmp_path / "saved.artifact"
+    serve_zoo(_serve_args(requests=4, save_artifact=str(art)))
+    out = capsys.readouterr().out
+    assert f"saved compile artifact to {art}" in out
+    assert (art / "manifest.json").exists()
+    serve_zoo(_serve_args(requests=4, artifact=str(art)))
+    assert "loaded artifact" in capsys.readouterr().out
+
+
+def test_serve_zoo_rejects_single_shape_artifact(
+    mlp_reference, tmp_path, capsys
+):
+    art = tmp_path / "single.artifact"
+    repro.save(mlp_reference, art)
+    with pytest.raises(SystemExit, match="batched artifact"):
+        serve_zoo(_serve_args(artifact=str(art)))

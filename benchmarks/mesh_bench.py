@@ -1,0 +1,173 @@
+"""Mesh-scaling benchmark: sharded ExecutionPlans vs the single-device plan.
+
+For every (zoo model, device count) cell this harness compiles the same
+graph at ``Target(devices=d)`` (tensor-parallel ``(1, d)`` mesh) and
+reports:
+
+  * **modeled** — the mesh-critical-path cycle model (slowest shard's
+    accel + host + interconnect cycles; the ring-collective cost is charged
+    per inserted ``all_gather``/``all_reduce``), and the modeled throughput
+    speedup vs ``devices=1``;
+  * **wall-clock** — measured ``run()`` latency through the thread-per-shard
+    mesh executor (informational on a shared-memory host: real shards would
+    run on separate devices, here they share one CPU).
+
+Functional correctness gates the timing: every sharded output must be
+bit-exact with the ``devices=1`` plan.
+
+Results land in ``BENCH_mesh.json``.  ``--gate`` asserts the tentpole
+claim: >= 1.8x modeled-throughput speedup at ``devices=4`` on at least two
+zoo models.  ``--smoke`` shrinks the request pool (CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import numpy as np
+
+import repro
+from repro.core.zoo import get_model
+
+DEVICES = (1, 2, 4)
+MODELS = ("toycar_mlp", "transformer_block")
+ACCELERATOR = "gemmini"
+GATE_SPEEDUP = 1.8
+GATE_MIN_MODELS = 2
+
+
+def _time_run(module, traffic, reps: int) -> dict:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for feeds in traffic:
+            module.run(feeds)
+        best = min(best, time.perf_counter() - t0)
+    best = max(best, 1e-9)
+    return {"req_s": len(traffic) / best, "total_s": best}
+
+
+def bench_model(model_name: str, acc: str, *, smoke: bool) -> dict:
+    model = get_model(model_name)
+    n_requests = 8 if smoke else 32
+    traffic = [model.feeds(seed=s) for s in range(n_requests)]
+    reps = 2 if smoke else 5
+
+    cells = {}
+    base_outs = None
+    base_cycles = None
+    for d in DEVICES:
+        target = repro.Target(
+            acc, mode="optimized", cache=False, devices=d, mesh=(1, d)
+        )
+        module = repro.compile(model_name, target)
+        outs = [module.run(feeds) for feeds in traffic]  # also warms the plan
+        if d == 1:
+            base_outs = outs
+        else:
+            # correctness gate: sharded == single-device, bit for bit
+            for i, (ref, got) in enumerate(zip(base_outs, outs)):
+                for a, b in zip(ref, got):
+                    assert np.array_equal(a, b), (
+                        f"{model_name}/{acc}@{d}dev diverges from devices=1 "
+                        f"at request {i}"
+                    )
+        cycles = module.modeled_cycles()
+        if d == 1:
+            base_cycles = cycles["total"]
+        n_collectives = 0
+        shards = getattr(module, "shards", {(0, 0): module})
+        for shard in shards.values():
+            n_collectives += sum(
+                1
+                for n in shard.graph.toposort()
+                if n.op in ("all_gather", "all_reduce", "reduce_scatter")
+            )
+        cells[str(d)] = {
+            "devices": d,
+            "modeled_cycles": cycles,
+            "modeled_speedup": base_cycles / max(cycles["total"], 1e-9),
+            "n_collective_nodes": n_collectives,
+            "wall_clock": _time_run(module, traffic, reps),
+        }
+    return {
+        "model": model_name,
+        "accelerator": acc,
+        "n_requests": n_requests,
+        "cells": cells,
+        "modeled_speedup_at_4": cells["4"]["modeled_speedup"],
+    }
+
+
+def run(models, acc: str, *, smoke: bool, gate: bool, out: Path) -> dict:
+    rows = []
+    for name in models:
+        row = bench_model(name, acc, smoke=smoke)
+        rows.append(row)
+        for d in DEVICES:
+            c = row["cells"][str(d)]
+            print(
+                f"{row['model']:>18} {acc:>8} devices={d} "
+                f"modeled={c['modeled_cycles']['total']:>10,.0f} cyc "
+                f"(comm {c['modeled_cycles']['comm']:>7,.0f}) "
+                f"speedup={c['modeled_speedup']:>5.2f}x "
+                f"wall={c['wall_clock']['req_s']:>8.0f} req/s"
+            )
+    payload = {
+        "bench": "mesh_sharded_vs_single_device",
+        "smoke": smoke,
+        "host": platform.machine(),
+        "accelerator": acc,
+        "devices": list(DEVICES),
+        "rows": rows,
+        "summary": {
+            "gate_speedup": GATE_SPEEDUP,
+            "models_passing_gate": [
+                r["model"]
+                for r in rows
+                if r["modeled_speedup_at_4"] >= GATE_SPEEDUP
+            ],
+        },
+    }
+    out.write_text(json.dumps(payload, indent=2))
+    passing = payload["summary"]["models_passing_gate"]
+    print(
+        f"\nwrote {out} ({len(rows)} models); {len(passing)} model(s) reach "
+        f">= {GATE_SPEEDUP}x modeled throughput at devices=4: {passing}"
+    )
+    if gate:
+        assert len(passing) >= GATE_MIN_MODELS, (
+            f"mesh gate: expected >= {GATE_MIN_MODELS} models at >= "
+            f"{GATE_SPEEDUP}x modeled speedup on devices=4, got {passing} "
+            f"(speedups: "
+            f"{[(r['model'], round(r['modeled_speedup_at_4'], 2)) for r in rows]})"
+        )
+    return payload
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true", help="small pool (CI)")
+    ap.add_argument(
+        "--gate",
+        action="store_true",
+        help=f"assert >= {GATE_SPEEDUP}x modeled speedup at devices=4 on "
+        f">= {GATE_MIN_MODELS} models",
+    )
+    ap.add_argument("--models", nargs="*", default=None)
+    ap.add_argument("--accelerator", default=ACCELERATOR)
+    ap.add_argument("--out", type=Path, default=Path("BENCH_mesh.json"))
+    args = ap.parse_args(argv)
+    models = args.models or list(MODELS)
+    for m in models:
+        get_model(m)  # fail fast on typos
+    return run(models, args.accelerator, smoke=args.smoke, gate=args.gate,
+               out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ def main() -> None:
         coldstart_bench,
         integration_bench,
         kernels_bench,
+        mesh_bench,
         roofline,
         serving_bench,
         table1_loc,
@@ -80,6 +81,20 @@ def main() -> None:
             f"cells={len(cold['rows'])};"
             f"best_load_speedup={cold['summary']['best_load_speedup']:.1f}x;"
             f"best_overlap_speedup={cold['summary']['best_overlap_speedup']:.2f}x",
+        )
+    )
+
+    # -- mesh: sharded plans vs the single-device plan ------------------------
+    t0 = time.perf_counter()
+    mesh = mesh_bench.main(["--smoke"])
+    best = max(r["modeled_speedup_at_4"] for r in mesh["rows"])
+    csv_rows.append(
+        (
+            "mesh_sharded_vs_single_device",
+            (time.perf_counter() - t0) * 1e6,
+            f"models={len(mesh['rows'])};"
+            f"best_modeled_speedup_at_4={best:.2f}x;"
+            f"passing_gate={len(mesh['summary']['models_passing_gate'])}",
         )
     )
 

@@ -68,8 +68,11 @@ def _time_loop(module, traffic, reps: int) -> dict:
 
 def _time_batched(module, traffic, reps: int) -> dict:
     """Bucketed dispatch; each request's latency is its chunk's wall time
-    (the requests of one chunk complete together)."""
-    from repro.core.batching import plan_chunks
+    (the requests of one chunk complete together).  Latencies are also
+    grouped by the bucket each chunk dispatched into, so the per-bucket
+    p50/p99 shows where padding (or the unpadded single-sample fast path)
+    actually lands."""
+    from repro.core.batching import pick_bucket, plan_chunks
 
     chunks = []
     i = 0
@@ -78,21 +81,30 @@ def _time_batched(module, traffic, reps: int) -> dict:
         i += size
     best_dt = float("inf")
     latencies: list[float] = []
+    best_by_bucket: dict[int, list[float]] = {}
     for _ in range(reps):
         lat: list[float] = []
+        by_bucket: dict[int, list[float]] = {}
         t0 = time.perf_counter()
         for chunk in chunks:
             t1 = time.perf_counter()
             module.run_many(chunk)
-            lat.extend([time.perf_counter() - t1] * len(chunk))
+            chunk_dt = time.perf_counter() - t1
+            lat.extend([chunk_dt] * len(chunk))
+            bucket = pick_bucket(module.bucket_sizes(), len(chunk))
+            by_bucket.setdefault(bucket, []).append(chunk_dt)
         dt = time.perf_counter() - t0
         if dt < best_dt:
-            best_dt, latencies = dt, lat
+            best_dt, latencies, best_by_bucket = dt, lat, by_bucket
     best_dt = max(best_dt, 1e-9)
     return {
         "req_s": len(traffic) / best_dt,
         "total_s": best_dt,
         **_percentiles(latencies),
+        "per_bucket": {
+            str(b): {"n_chunks": len(v), **_percentiles(v)}
+            for b, v in sorted(best_by_bucket.items())
+        },
     }
 
 

@@ -57,6 +57,7 @@ from repro.core.registry import (
     validate_description,
 )
 from repro.core.schedule_cache import ScheduleCache, default_cache_dir
+from repro.core.sharded import ShardedModule
 from repro.frontend import UnsupportedJaxprError, trace_model
 
 __version__ = "0.2.0"
@@ -76,6 +77,7 @@ __all__ = [
     "REGISTRY",
     "ReproDeprecationWarning",
     "ScheduleCache",
+    "ShardedModule",
     "Target",
     "TargetError",
     "UnsupportedJaxprError",

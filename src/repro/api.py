@@ -95,6 +95,15 @@ class Target:
     #: DEFAULT_BATCH_BUCKETS entries up to (and including) this size;
     #: ``CompileOptions.batch_buckets`` overrides the bucket set exactly.
     batch_size: int = 1
+    #: mesh size: ``devices > 1`` compiles ONE graph into one ExecutionPlan
+    #: per shard of a ``(data, model)`` mesh and ``compile()`` returns a
+    #: :class:`~repro.core.sharded.ShardedModule` (or a BatchedModule of
+    #: them).  The factorization defaults to the elastic-mesh rule
+    #: (``repro.launch.mesh.mesh_factorization``); ``mesh`` pins it.
+    devices: int = 1
+    #: explicit ``(data, model)`` factorization of ``devices``.  Giving
+    #: only ``mesh`` derives ``devices`` from its product.
+    mesh: tuple[int, int] | None = None
 
     def __post_init__(self):
         problems = []
@@ -102,6 +111,30 @@ class Target:
             problems.append(
                 f"batch_size must be a positive int, got {self.batch_size!r}"
             )
+        if not isinstance(self.devices, int) or self.devices < 1:
+            problems.append(
+                f"devices must be a positive int, got {self.devices!r}"
+            )
+        elif self.mesh is not None:
+            mesh = tuple(self.mesh) if isinstance(self.mesh, list) else self.mesh
+            if (
+                not isinstance(mesh, tuple)
+                or len(mesh) != 2
+                or not all(isinstance(a, int) and a >= 1 for a in mesh)
+            ):
+                problems.append(
+                    f"mesh must be a (data, model) pair of positive ints, "
+                    f"got {self.mesh!r}"
+                )
+            else:
+                object.__setattr__(self, "mesh", mesh)
+                if self.devices == 1:
+                    object.__setattr__(self, "devices", mesh[0] * mesh[1])
+                elif mesh[0] * mesh[1] != self.devices:
+                    problems.append(
+                        f"mesh {mesh} factorizes {mesh[0] * mesh[1]} devices "
+                        f"but devices={self.devices} was also passed"
+                    )
         try:
             resolve_mode(self.mode)
         except ValueError:
@@ -153,7 +186,27 @@ class Target:
             if isinstance(self.accelerator, str)
             else getattr(self.accelerator, "name", "<description>")
         )
-        return f"{name}:{self.mode}"
+        base = f"{name}:{self.mode}"
+        if isinstance(self.devices, int) and self.devices > 1:
+            try:
+                dp, mp = self.resolved_mesh
+                base += f"@{self.devices}dev(data={dp},model={mp})"
+            except Exception:  # an invalid mesh mid-TargetError formatting
+                base += f"@{self.devices}dev"
+        return base
+
+    @property
+    def resolved_mesh(self) -> tuple[int, int]:
+        """The ``(data, model)`` mesh this target compiles for: the
+        explicit ``mesh`` if given, else the elastic factorization of
+        ``devices`` (largest power-of-two model axis, rest data)."""
+        if self.mesh is not None:
+            return self.mesh
+        if self.devices == 1:
+            return (1, 1)
+        from repro.launch.mesh import mesh_factorization
+
+        return mesh_factorization(self.devices)
 
     @property
     def internal_mode(self) -> str:
@@ -432,9 +485,20 @@ def compile(
         graph = _graph_for(model, example_inputs, params)
     else:
         reference, build = _batched_graph_builder(model, example_inputs, params)
+    dp, mp = target.resolved_mesh
+    if target.devices > 1 and options.passes is not None:
+        raise ValueError(
+            "devices > 1 inserts the shard-partitioning pass into the "
+            "per-mode pipeline; a custom CompileOptions.passes list cannot "
+            "be sharded"
+        )
     backend = backend_for(target, fresh=options.fresh_backend)
     store = None
-    if options.artifact_dir is not None and options.passes is None:
+    if (
+        options.artifact_dir is not None
+        and options.passes is None
+        and target.devices == 1  # the store key carries no mesh coordinate
+    ):
         from repro.core.artifact import ArtifactStore
 
         store = ArtifactStore(Path(options.artifact_dir))
@@ -473,15 +537,72 @@ def compile(
             store.put(key, module, source_fingerprint=src_fp)
         return module
 
+    def compile_sharded(base_graph, dp_eff, signature):
+        """Compile one graph into its per-shard ExecutionPlan set: every
+        mesh coordinate gets its own CLONE of the source graph (the pass
+        pipeline mutates in place, and each shard's shard pass rewrites
+        different slices) compiled with that coordinate's ShardSpec."""
+        from repro.core.collective import ShardSpec
+        from repro.core.ir import clone_graph
+        from repro.core.sharded import ShardedModule
+
+        shards = {}
+        for d in range(dp_eff):
+            for m in range(mp):
+                module = backend.compile_graph(
+                    clone_graph(base_graph),
+                    mode=target.internal_mode,
+                    pass_context=options.pass_context,
+                    measure_top_k=options.measure_top_k,
+                    shard=ShardSpec(
+                        data=dp_eff, model=mp, data_rank=d, model_rank=m
+                    ),
+                )
+                if not options.allow_host_fallback:
+                    _check_offload(module)
+                shards[(d, m)] = module
+        return ShardedModule(
+            shards=shards, mesh=(dp_eff, mp), signature=signature
+        )
+
     if buckets is None:
-        return compile_graph(graph)
+        if target.devices == 1:
+            return compile_graph(graph)
+        if dp > 1:
+            raise ValueError(
+                f"target mesh (data={dp}, model={mp}) is data-parallel, "
+                f"which splits along the batch dim and therefore needs "
+                f"batch buckets (Target(batch_size=...) or CompileOptions("
+                f"batch_buckets=...)); use mesh=(1, {target.devices}) for "
+                f"pure tensor parallelism on an unbatched compile"
+            )
+        signature = tuple(
+            (n.name, tuple(n.shape), n.dtype) for n in graph.inputs()
+        )
+        return compile_sharded(graph, 1, signature)
 
     inputs, outputs = io_specs_from_graph(reference)
-    return BatchedModule(
-        modules={b: compile_graph(build(b), bucket=b) for b in buckets},
-        inputs=inputs,
-        outputs=outputs,
-    )
+    if target.devices == 1:
+        # the per-sample reference compiles into the UNPADDED single-request
+        # plan: run_many routes size-1 chunks through it instead of
+        # pack/pad-to-bucket/unpack (the batched-serving latency fix)
+        sample_module = compile_graph(reference)
+        return BatchedModule(
+            modules={b: compile_graph(build(b), bucket=b) for b in buckets},
+            inputs=inputs,
+            outputs=outputs,
+            sample_module=sample_module,
+        )
+    modules = {}
+    for b in buckets:
+        # a bucket only splits data-parallel when the mesh divides it
+        # evenly; otherwise that bucket runs tensor-parallel-only
+        dp_eff = dp if dp > 1 and b % dp == 0 else 1
+        signature = tuple(
+            (s.name, s.batched_shape(b), s.dtype) for s in inputs
+        )
+        modules[b] = compile_sharded(build(b // dp_eff), dp_eff, signature)
+    return BatchedModule(modules=modules, inputs=inputs, outputs=outputs)
 
 
 def save(module, path):

@@ -154,6 +154,13 @@ class ArchSpec:
     # loop-instruction path (C toolchain / proposed) amortizes this; the
     # naive per-tile path pays it every tile.
     instr_overhead_cycles: float = 30.0
+    # Inter-device interconnect (sharded ExecutionPlans): per-link payload
+    # bandwidth and the fixed per-hop latency of one ring step.  A ring
+    # collective over P devices moves (P-1) messages of B/P bytes per
+    # device, so e.g. all_gather costs (P-1) * (B/P) / link_bytes_per_cycle
+    # + (P-1) * link_hop_cycles (see ``repro.core.collective``).
+    link_bytes_per_cycle: float = 16.0
+    link_hop_cycles: float = 64.0
 
     def __post_init__(self):
         if len(self.levels) < 2:
@@ -212,6 +219,8 @@ class ArchSpec:
             "host_preproc_cycles_per_byte": self.host_preproc_cycles_per_byte,
             "host_epilogue_cycles_per_byte": self.host_epilogue_cycles_per_byte,
             "instr_overhead_cycles": self.instr_overhead_cycles,
+            "link_bytes_per_cycle": self.link_bytes_per_cycle,
+            "link_hop_cycles": self.link_hop_cycles,
         }
 
     @classmethod
@@ -264,6 +273,8 @@ class ArchSpec:
             host_preproc_cycles_per_byte=d.get("host_preproc_cycles_per_byte", 4.0),
             host_epilogue_cycles_per_byte=d.get("host_epilogue_cycles_per_byte", 2.0),
             instr_overhead_cycles=d.get("instr_overhead_cycles", 30.0),
+            link_bytes_per_cycle=d.get("link_bytes_per_cycle", 16.0),
+            link_hop_cycles=d.get("link_hop_cycles", 64.0),
         )
 
     def to_yaml(self) -> str:

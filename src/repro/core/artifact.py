@@ -54,6 +54,7 @@ from repro.core.ir import Graph, Node
 from repro.core.pass_manager import PassStats, PipelineReport
 from repro.core.registry import REGISTRY
 from repro.core.schedule_cache import result_from_dict, result_to_dict
+from repro.core.sharded import ShardedModule
 
 #: bump on any incompatible change to the manifest or npz layout; load
 #: rejects other versions with a clear error instead of misreading them.
@@ -261,10 +262,10 @@ def save_module(
     (written atomically).  ``source_fingerprint`` optionally records the
     *pre-pipeline* graph fingerprint the module was compiled from (the
     ``ArtifactStore`` keys by it)."""
-    if isinstance(module, BatchedModule):
+    if isinstance(module, (BatchedModule, ShardedModule)):
         raise ArtifactError(
             "save_module() takes a CompiledModule; use repro.save() for "
-            "batched modules"
+            "batched or sharded modules"
         )
     plan = module.finalize()
     graph_d, arrays = graph_to_dict(module.graph)
@@ -448,6 +449,70 @@ def load_module(path: str | Path, *, desc=None) -> CompiledModule:
 
 
 # ---------------------------------------------------------------------------
+# sharded artifacts (one sub-artifact per mesh coordinate)
+# ---------------------------------------------------------------------------
+
+
+def save_sharded(
+    module: ShardedModule,
+    path: str | Path,
+    *,
+    source_fingerprint: str | None = None,
+) -> Path:
+    """Serialize a ShardedModule: a sharded manifest (mesh factorization +
+    the full unsharded input signature) plus one full module artifact per
+    mesh coordinate (``shard_<data>_<model>/``).  Every shard's plan was
+    compiled from the same source graph, so one ``source_fingerprint``
+    covers them all."""
+    manifest = {
+        "schema_version": SCHEMA_VERSION,
+        "kind": "sharded",
+        "mesh": list(module.mesh),
+        "signature": [
+            [name, list(shape), dtype]
+            for name, shape, dtype in module.signature
+        ],
+    }
+
+    def write(tmp: Path) -> None:
+        (tmp / _MANIFEST).write_text(json.dumps(manifest))
+        for (d, m), shard in sorted(module.shards.items()):
+            save_module(
+                shard,
+                tmp / f"shard_{d}_{m}",
+                source_fingerprint=source_fingerprint,
+            )
+
+    path = Path(path)
+    _atomic_write_dir(path, write)
+    return path
+
+
+def load_sharded(path: str | Path, *, desc=None) -> ShardedModule:
+    path = Path(path)
+    manifest = _read_manifest(path)
+    if manifest.get("kind") != "sharded":
+        raise ArtifactError(
+            f"artifact at {path} is kind {manifest.get('kind')!r}, expected "
+            f"'sharded'"
+        )
+    dp, mp = manifest["mesh"]
+    shards = {
+        (d, m): load_module(path / f"shard_{d}_{m}", desc=desc)
+        for d in range(dp)
+        for m in range(mp)
+    }
+    return ShardedModule(
+        shards=shards,
+        mesh=(dp, mp),
+        signature=tuple(
+            (name, tuple(shape), dtype)
+            for name, shape, dtype in manifest["signature"]
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
 # batched artifacts (one sub-artifact per bucket)
 # ---------------------------------------------------------------------------
 
@@ -466,17 +531,18 @@ def save_batched(
         "buckets": list(module.bucket_sizes()),
         "inputs": [dataclasses.asdict(s) for s in module.inputs],
         "outputs": [dataclasses.asdict(s) for s in module.outputs],
+        "has_sample": module.sample_module is not None,
     }
     fps = source_fingerprints or {}
 
     def write(tmp: Path) -> None:
         (tmp / _MANIFEST).write_text(json.dumps(_encode_attr(manifest)))
         for b in module.bucket_sizes():
-            save_module(
-                module.bucket_module(b),
-                tmp / f"bucket_{b}",
-                source_fingerprint=fps.get(b),
-            )
+            sub = module.bucket_module(b)
+            saver = save_sharded if isinstance(sub, ShardedModule) else save_module
+            saver(sub, tmp / f"bucket_{b}", source_fingerprint=fps.get(b))
+        if module.sample_module is not None:
+            save_module(module.sample_module, tmp / "sample")
 
     path = Path(path)
     _atomic_write_dir(path, write)
@@ -501,14 +567,21 @@ def load_batched(path: str | Path, *, desc=None) -> BatchedModule:
             stacked=d["stacked"],
         )
 
-    modules = {
-        b: load_module(path / f"bucket_{b}", desc=desc)
-        for b in manifest["buckets"]
-    }
+    def bucket(b: int):
+        sub_path = path / f"bucket_{b}"
+        if _read_manifest(sub_path).get("kind") == "sharded":
+            return load_sharded(sub_path, desc=desc)
+        return load_module(sub_path, desc=desc)
+
+    modules = {b: bucket(b) for b in manifest["buckets"]}
+    sample = None
+    if manifest.get("has_sample"):
+        sample = load_module(path / "sample", desc=desc)
     return BatchedModule(
         modules=modules,
         inputs=tuple(spec(d) for d in manifest["inputs"]),
         outputs=tuple(spec(d) for d in manifest["outputs"]),
+        sample_module=sample,
     )
 
 
@@ -516,11 +589,13 @@ def save_any(module, path: str | Path) -> Path:
     """``repro.save``: dispatch on module kind."""
     if isinstance(module, BatchedModule):
         return save_batched(module, path)
+    if isinstance(module, ShardedModule):
+        return save_sharded(module, path)
     if isinstance(module, CompiledModule):
         return save_module(module, path)
     raise ArtifactError(
-        f"repro.save() takes a CompiledModule or BatchedModule, got "
-        f"{type(module).__name__}"
+        f"repro.save() takes a CompiledModule, BatchedModule, or "
+        f"ShardedModule, got {type(module).__name__}"
     )
 
 
@@ -528,8 +603,11 @@ def load_any(path: str | Path, *, desc=None):
     """``repro.load``: dispatch on the artifact's recorded kind."""
     path = Path(path)
     manifest = _read_manifest(path)
-    if manifest.get("kind") == "batched":
+    kind = manifest.get("kind")
+    if kind == "batched":
         return load_batched(path, desc=desc)
+    if kind == "sharded":
+        return load_sharded(path, desc=desc)
     return load_module(path, desc=desc)
 
 

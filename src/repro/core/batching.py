@@ -112,6 +112,10 @@ class BatchedModule:
     inputs: tuple[_IOSpec, ...]
     #: per-sample output signature
     outputs: tuple[_IOSpec, ...]
+    #: the UNPADDED per-sample plan: single-request chunks dispatch here
+    #: directly (no pack/pad/unpack), which is what keeps batched serving
+    #: from regressing the latency of batch-of-1 traffic
+    sample_module: CompiledModule | None = None
     _buckets: tuple[int, ...] = field(init=False, repr=False)
     _feed_names: frozenset = field(init=False, repr=False)
 
@@ -134,6 +138,18 @@ class BatchedModule:
                     raise ValueError(
                         f"bucket {b} module input {spec.name!r} is {got}, "
                         f"expected {want} for per-sample shape {spec.shape}"
+                    )
+        if self.sample_module is not None:
+            sig = dict(
+                (name, (tuple(shape), dtype))
+                for name, shape, dtype in self.sample_module.input_signature()
+            )
+            for spec in self.inputs:
+                got = sig.get(spec.name)
+                if got != (spec.shape, spec.dtype):
+                    raise ValueError(
+                        f"sample module input {spec.name!r} is {got}, "
+                        f"expected per-sample {(spec.shape, spec.dtype)}"
                     )
 
     # -- introspection -------------------------------------------------------
@@ -225,6 +241,13 @@ class BatchedModule:
         results: list[list[np.ndarray]] = []
         i = 0
         for size in plan_chunks(self._buckets, len(feeds_list)):
+            if size == 1 and self.sample_module is not None:
+                # single-request chunk: the unpadded per-sample plan is
+                # strictly cheaper than pack -> pad-to-bucket -> unpack
+                # (and bit-exact with it — padded rows are sliced away)
+                results.append(self.sample_module.run(feeds_list[i]))
+                i += 1
+                continue
             bucket = pick_bucket(self._buckets, size)
             chunk = feeds_list[i : i + size]
             outs = self.modules[bucket].run(self._pack(chunk, bucket))

@@ -1,0 +1,257 @@
+"""Collective runtime + interconnect cost model for sharded ExecutionPlans.
+
+``Target(devices=N)`` compiles one graph into one plan per mesh coordinate
+(see ``repro.core.sharded``).  The shard partitioning pass (``passes.
+make_shard_pass``) inserts collective IR ops — ``all_gather`` /
+``all_reduce`` / ``reduce_scatter`` — wherever a tensor-parallel split must
+re-materialize the full value.  At run time every shard executes its plan
+on its own thread and the collectives rendezvous through a
+:class:`CollectiveSession`: the last participant to arrive combines the
+contributions with plain numpy and every waiter wakes with the result
+(barrier + reduction, the software stand-in for a ring collective).
+
+The *modeled* cost charges the classic ring formulas, parameterized on the
+``ArchSpec`` interconnect fields so accelerators differ:
+
+    ring step  = (B / P) bytes over one link  +  one fixed hop latency
+    all_gather / reduce_scatter = (P-1) ring steps
+    all_reduce = reduce_scatter + all_gather = 2 * (P-1) ring steps
+
+where ``B`` is the FULL (gathered/reduced) payload in bytes and ``P`` the
+participant count.  Golden tests pin these formulas per accelerator
+(tests/test_sharded.py).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from repro.core.arch_spec import ArchSpec
+
+#: collective ops the shard pass may insert (subset of ``ir.COLLECTIVE_OPS``
+#: that needs a cross-shard rendezvous; ``shard_slice`` is shard-local).
+EXCHANGE_OPS = ("all_gather", "all_reduce", "reduce_scatter")
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """One shard's coordinate in a ``(data, model)`` mesh.
+
+    ``data``/``model`` are the mesh axis sizes; ``data_rank``/``model_rank``
+    this shard's coordinates.  ``devices == data * model``.  The shard pass
+    reads the *model* axis for tensor-parallel splits; the api layer
+    implements the *data* axis by retracing each batch bucket at
+    ``bucket/data`` and gathering outputs along the batch dim.
+    """
+
+    data: int = 1
+    model: int = 1
+    data_rank: int = 0
+    model_rank: int = 0
+
+    def __post_init__(self):
+        if self.data < 1 or self.model < 1:
+            raise ValueError(f"mesh axes must be >= 1, got {self!r}")
+        if not (0 <= self.data_rank < self.data):
+            raise ValueError(f"data_rank out of range: {self!r}")
+        if not (0 <= self.model_rank < self.model):
+            raise ValueError(f"model_rank out of range: {self!r}")
+
+    @property
+    def devices(self) -> int:
+        return self.data * self.model
+
+
+# ---------------------------------------------------------------------------
+# Modeled interconnect cost (ring collectives).
+# ---------------------------------------------------------------------------
+
+
+def collective_cycles(op: str, nbytes: int, parts: int, arch: ArchSpec) -> float:
+    """Modeled cycles of one collective over ``parts`` devices moving a
+    FULL payload of ``nbytes`` (the gathered/reduced tensor size).
+
+    Ring schedule: each of the ``parts - 1`` steps ships ``nbytes/parts``
+    over one link and pays one fixed hop latency.  ``all_reduce`` is
+    reduce-scatter followed by all-gather (2x).  One device is free.
+    """
+    if parts <= 1:
+        return 0.0
+    steps = parts - 1
+    per_step = (nbytes / parts) / arch.link_bytes_per_cycle + arch.link_hop_cycles
+    if op == "all_reduce":
+        return 2.0 * steps * per_step
+    if op in ("all_gather", "reduce_scatter"):
+        return steps * per_step
+    raise ValueError(f"unknown collective op {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# Runtime rendezvous.
+# ---------------------------------------------------------------------------
+
+
+class CollectiveError(RuntimeError):
+    """A peer shard failed while this shard was parked in a collective."""
+
+
+class CollectiveSession:
+    """One ``ShardedModule`` call's rendezvous state.
+
+    ``exchange(group, rank, parts, value, combine)`` blocks until every
+    participant of ``group`` has arrived (each call site uses a distinct
+    group id, suffixed with a per-session sequence number so the same
+    static op rendezvouses freshly on every plan execution), then returns
+    ``combine([v_0, ..., v_{parts-1}])`` — computed once, by the last
+    arrival, so the reduction order is deterministic (rank order) and every
+    shard observes the identical array.
+
+    ``abort(exc)`` unwinds every parked and future participant with a
+    :class:`CollectiveError` naming the originating failure — a crashed
+    shard can never deadlock its peers.
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._pending: dict[str, dict] = {}
+        self._failure: BaseException | None = None
+
+    def abort(self, exc: BaseException) -> None:
+        with self._cond:
+            if self._failure is None:
+                self._failure = exc
+            self._cond.notify_all()
+
+    def exchange(
+        self,
+        group: str,
+        rank: int,
+        parts: int,
+        value: np.ndarray,
+        combine: Callable[[list[np.ndarray]], np.ndarray],
+    ) -> np.ndarray:
+        if parts <= 1:
+            return combine([value])
+        with self._cond:
+            if self._failure is not None:
+                raise CollectiveError(
+                    f"peer shard failed before collective {group!r}"
+                ) from self._failure
+            st = self._pending.get(group)
+            if st is None:
+                st = self._pending[group] = {
+                    "vals": [None] * parts,
+                    "n": 0,
+                    "out": None,
+                }
+            if st["vals"][rank] is not None:
+                raise CollectiveError(
+                    f"duplicate rank {rank} in collective {group!r}"
+                )
+            st["vals"][rank] = value
+            st["n"] += 1
+            if st["n"] == parts:
+                # last arrival combines (deterministic rank order) and
+                # publishes; the group entry is dropped so the id can be
+                # reused by the next call through this session
+                st["out"] = combine(st["vals"])
+                del self._pending[group]
+                self._cond.notify_all()
+                return st["out"]
+            while st["out"] is None and self._failure is None:
+                self._cond.wait()
+            if st["out"] is None:
+                raise CollectiveError(
+                    f"peer shard failed during collective {group!r}"
+                ) from self._failure
+            return st["out"]
+
+
+# thread-local current session: plan steps are baked closures, so the
+# executing session rides on the thread rather than the call signature.
+_tls = threading.local()
+
+
+class session_scope:
+    """Bind ``session`` (plus this shard's sequence counter) as the current
+    collective context of this thread for the duration of a ``with``."""
+
+    def __init__(self, session: CollectiveSession, seq_prefix: str = ""):
+        self._ctx = (session, seq_prefix)
+
+    def __enter__(self):
+        self._prev = getattr(_tls, "ctx", None)
+        _tls.ctx = self._ctx
+        return self._ctx[0]
+
+    def __exit__(self, *exc):
+        _tls.ctx = self._prev
+        return False
+
+
+def current_session() -> tuple[CollectiveSession, str] | None:
+    return getattr(_tls, "ctx", None)
+
+
+def _combine_for(op: str, axis: int, dtype: str):
+    if op == "all_gather":
+        return lambda vals: np.concatenate(vals, axis=axis)
+    if op in ("all_reduce", "reduce_scatter"):
+        # integer payloads accumulate wide then cast back — matches the
+        # accelerator's int64 accumulation semantics bit-for-bit; float
+        # payloads sum in rank order (deterministic).
+        if dtype.startswith(("int", "uint")):
+            def _sum_int(vals):
+                acc = vals[0].astype(np.int64)
+                for v in vals[1:]:
+                    acc = acc + v.astype(np.int64)
+                return acc.astype(dtype)
+
+            return _sum_int
+        def _sum(vals):
+            acc = vals[0]
+            for v in vals[1:]:
+                acc = acc + v
+            return acc.astype(dtype)
+
+        return _sum
+    raise ValueError(f"unknown collective op {op!r}")
+
+
+def collective_fn(
+    op: str, group: str, rank: int, parts: int, axis: int, dtype: str
+) -> Callable[[np.ndarray], np.ndarray]:
+    """Build the plan-step closure of one collective node.  With ``parts
+    == 1`` the single-participant semantics apply (gather/reduce of one
+    contribution is the identity), so a ``devices=1`` plan never needs a
+    session."""
+    combine = _combine_for(op, axis, dtype)
+
+    def post(full: np.ndarray) -> np.ndarray:
+        # reduce_scatter: everyone receives the full reduction from the
+        # rendezvous, then keeps only its own slice
+        if op != "reduce_scatter":
+            return full
+        size = full.shape[axis] // parts
+        idx = [slice(None)] * full.ndim
+        idx[axis] = slice(rank * size, (rank + 1) * size)
+        return full[tuple(idx)]
+
+    if parts <= 1:
+        return lambda x: combine([x])
+
+    def run(x: np.ndarray) -> np.ndarray:
+        ctx = current_session()
+        if ctx is None:
+            raise CollectiveError(
+                f"collective {group!r} executed outside a ShardedModule "
+                f"session (plan compiled for {parts} shards)"
+            )
+        session, prefix = ctx
+        return post(session.exchange(f"{prefix}{group}", rank, parts, x, combine))
+
+    return run

@@ -70,6 +70,9 @@ def make_edge_npu_arch() -> ArchSpec:
         host_preproc_cycles_per_byte=32.0,  # MCU-class host, scalar loops
         host_epilogue_cycles_per_byte=4.0,
         instr_overhead_cycles=512.0,  # MMIO doorbell + completion IRQ
+        # board-level SPI-class link between NPUs: narrow and high-latency
+        link_bytes_per_cycle=4.0,
+        link_hop_cycles=256.0,
     )
 
 

@@ -62,6 +62,10 @@ def make_gemmini_arch() -> ArchSpec:
         host_preproc_cycles_per_byte=24.0,  # scalar host loop: ld/st + requant
         host_epilogue_cycles_per_byte=2.0,  # unfused requant/clip on int32 out
         instr_overhead_cycles=200.0,  # RoCC issue + fence round-trip
+        # chip-to-chip over the SoC NoC: one int8 row per cycle, with a
+        # DMA-descriptor setup per ring hop
+        link_bytes_per_cycle=16.0,
+        link_hop_cycles=64.0,
     )
 
 

@@ -77,6 +77,9 @@ def make_tpu_v5e_arch(vmem_bytes: int = VMEM_BYTES) -> ArchSpec:
         host_preproc_cycles_per_byte=1.0,
         # per-pallas_call launch + Mosaic prologue, amortized per grid step:
         instr_overhead_cycles=10.0,
+        # ICI ring link: wide, low-latency inter-chip interconnect
+        link_bytes_per_cycle=128.0,
+        link_hop_cycles=32.0,
     )
 
 

@@ -17,7 +17,15 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core.accel import AcceleratorDescription
-from repro.core.ir import Graph, Node, execute_node, gelu_ref, max_pool2d_ref
+from repro.core.collective import collective_cycles, collective_fn
+from repro.core.ir import (
+    COLLECTIVE_OPS,
+    Graph,
+    Node,
+    execute_node,
+    gelu_ref,
+    max_pool2d_ref,
+)
 from repro.core.simulator import simulate
 from repro.core.strategy import Strategy, dtype_bytes, gemm_instances
 
@@ -100,6 +108,27 @@ def compile_host_op(n: Node) -> Callable[..., np.ndarray]:
                 x.astype(np.int64) + b.astype(np.int64)
             ).astype(dtype)
         return lambda x, b: x + b
+    if op == "shard_slice":
+        ax, rank, parts = attrs["axis"], attrs["rank"], attrs["parts"]
+
+        def _shard_slice(x):
+            size = x.shape[ax] // parts
+            idx = [slice(None)] * x.ndim
+            idx[ax] = slice(rank * size, (rank + 1) * size)
+            return x[tuple(idx)]
+
+        return _shard_slice
+    if op in COLLECTIVE_OPS:
+        # rendezvous through the thread-local CollectiveSession the
+        # ShardedModule binds per call (identity when parts == 1)
+        return collective_fn(
+            op,
+            attrs["group"],
+            attrs["rank"],
+            attrs["parts"],
+            attrs["axis"],
+            dtype,
+        )
     if op == "softmax":
         ax = attrs.get("axis", -1)
 
@@ -586,13 +615,25 @@ class CompiledModule:
     def modeled_cycles(self) -> dict[str, float]:
         """Total modeled cycles: accelerator ops via the schedule simulator,
         residual host ops (unfolded preprocessing / unfused epilogues in
-        naive mode) via per-byte host costs."""
+        naive mode) via per-byte host costs, and collectives (sharded
+        plans) via the ring-interconnect model keyed on the arch's link
+        parameters (``comm``; zero for unsharded plans)."""
         arch = self.desc.arch
         accel = 0.0
         host = 0.0
+        comm = 0.0
         fused = self.mode != "naive"
         for n in self.graph.toposort():
-            if n in self.ops:
+            if n.op in COLLECTIVE_OPS:
+                # the FULL payload: the gathered/reduced tensor — the
+                # gather output, or the reduce input (== output for
+                # all_reduce, parts x output for reduce_scatter)
+                ref = n if n.op == "all_gather" else n.inputs[0]
+                nbytes = math.prod(ref.shape) * dtype_bytes(ref.dtype)
+                if n.op == "all_reduce":
+                    nbytes = math.prod(n.shape) * dtype_bytes(n.dtype)
+                comm += collective_cycles(n.op, nbytes, n.attrs["parts"], arch)
+            elif n in self.ops:
                 rep = simulate(
                     self.ops[n].strategy.schedule,
                     arch,
@@ -613,7 +654,12 @@ class CompiledModule:
                     else 0
                 )
                 host += in_bytes * arch.host_epilogue_cycles_per_byte
-        return {"accel": accel, "host": host, "total": accel + host}
+        return {
+            "accel": accel,
+            "host": host,
+            "comm": comm,
+            "total": accel + host + comm,
+        }
 
     def schedules(self) -> dict[str, Any]:
         return {

@@ -41,10 +41,18 @@ HOST_OPS = {
     "im2col",
     "softmax",
     "max_pool2d",
+    "shard_slice",
 }
 
 # Multi-op sequences the legalizer fuses into these generalized operators.
 GENERALIZED_OPS = {"generalized_dense", "generalized_conv2d"}
+
+# Cross-shard communication ops the shard-partitioning pass inserts
+# (``passes.make_shard_pass``).  They carry ``group``/``rank``/``parts``
+# attrs and execute as barrier+numpy reductions through a
+# ``repro.core.collective.CollectiveSession``; ``shard_slice`` (a plain
+# host op) is their shard-local counterpart.
+COLLECTIVE_OPS = {"all_gather", "all_reduce", "reduce_scatter"}
 
 
 @dataclass
@@ -299,6 +307,60 @@ def softmax(x: Node, axis: int = -1) -> Node:
     return Node("softmax", [x], {"axis": axis}, shape=x.shape, dtype=out_dtype)
 
 
+def shard_slice(x: Node, axis: int, rank: int, parts: int) -> Node:
+    """This shard's ``rank``-th of ``parts`` equal slices of ``x`` along
+    ``axis`` (the dimension must divide evenly — the shard pass only splits
+    when it does)."""
+    ax = axis % len(x.shape)
+    if x.shape[ax] % parts:
+        raise ValueError(
+            f"shard_slice: dim {ax} of {x.shape} not divisible by {parts}"
+        )
+    shape = tuple(
+        d // parts if i == ax else d for i, d in enumerate(x.shape)
+    )
+    return Node(
+        "shard_slice",
+        [x],
+        {"axis": ax, "rank": rank, "parts": parts},
+        shape=shape,
+        dtype=x.dtype,
+    )
+
+
+def _collective(op: str, x: Node, shape, axis: int, group: str, rank: int, parts: int) -> Node:
+    return Node(
+        op,
+        [x],
+        {"group": group, "rank": rank, "parts": parts, "axis": axis},
+        shape=tuple(shape),
+        dtype=x.dtype,
+    )
+
+
+def all_gather(x: Node, axis: int, *, group: str, rank: int, parts: int) -> Node:
+    """Concatenate every shard's ``x`` along ``axis`` (rank order)."""
+    ax = axis % len(x.shape)
+    shape = tuple(d * parts if i == ax else d for i, d in enumerate(x.shape))
+    return _collective("all_gather", x, shape, ax, group, rank, parts)
+
+
+def all_reduce(x: Node, *, group: str, rank: int, parts: int) -> Node:
+    """Element-wise sum of every shard's ``x`` (same shape on every shard)."""
+    return _collective("all_reduce", x, x.shape, 0, group, rank, parts)
+
+
+def reduce_scatter(x: Node, axis: int, *, group: str, rank: int, parts: int) -> Node:
+    """Sum every shard's ``x`` then keep this rank's slice along ``axis``."""
+    ax = axis % len(x.shape)
+    if x.shape[ax] % parts:
+        raise ValueError(
+            f"reduce_scatter: dim {ax} of {x.shape} not divisible by {parts}"
+        )
+    shape = tuple(d // parts if i == ax else d for i, d in enumerate(x.shape))
+    return _collective("reduce_scatter", x, shape, ax, group, rank, parts)
+
+
 def add(a: Node, b: Node) -> Node:
     return Node("add", [a, b], shape=_binary_shape(a, b), dtype=a.dtype)
 
@@ -400,6 +462,21 @@ def execute_node(n: Node, inputs: list[np.ndarray]) -> np.ndarray:
         x = inputs[0].astype(np.float64)
         e = np.exp(x - np.max(x, axis=ax, keepdims=True))
         return (e / np.sum(e, axis=ax, keepdims=True)).astype(n.dtype)
+    if op == "shard_slice":
+        ax, rank, parts = n.attrs["axis"], n.attrs["rank"], n.attrs["parts"]
+        size = inputs[0].shape[ax] // parts
+        idx = [slice(None)] * inputs[0].ndim
+        idx[ax] = slice(rank * size, (rank + 1) * size)
+        return inputs[0][tuple(idx)]
+    if op in COLLECTIVE_OPS:
+        # single-participant reference semantics (identity gather / sum of
+        # one / keep-own-slice); the multi-shard rendezvous lives in the
+        # planned executor (``collective.collective_fn``)
+        if n.attrs["parts"] > 1:
+            raise NotImplementedError(
+                f"{op} with parts > 1 executes via a CollectiveSession"
+            )
+        return inputs[0].astype(n.dtype)
     if op == "add":
         return inputs[0] + inputs[1]
     if op == "sub":
@@ -434,6 +511,31 @@ def execute_node(n: Node, inputs: list[np.ndarray]) -> np.ndarray:
         # evaluated through its dense form after im2col by the executor
         raise NotImplementedError("generalized_conv2d executes via backend lowering")
     raise NotImplementedError(f"execute_node: {op}")
+
+
+def clone_graph(graph: Graph) -> Graph:
+    """A structural deep copy: fresh ``Node`` objects wired like the
+    originals, in the SAME topological order and with the SAME names (so
+    per-shard clones number their nodes identically — the shard pass keys
+    collective groups by toposort position).  Attr dicts are copied deep
+    enough to mutate independently; const arrays are shared (read-only by
+    convention)."""
+    import copy
+
+    mapping: dict[Node, Node] = {}
+    for n in graph.toposort():
+        c = Node(
+            n.op,
+            [mapping[i] if i is not None else None for i in n.inputs],
+            copy.deepcopy(n.attrs),
+            shape=n.shape,
+            dtype=n.dtype,
+            name=n.name,
+            target=n.target,
+            value=n.value,
+        )
+        mapping[n] = c
+    return Graph([mapping[o] for o in graph.outputs], name=graph.name)
 
 
 def execute_graph(graph: Graph, feeds: dict[str, np.ndarray]) -> list[np.ndarray]:

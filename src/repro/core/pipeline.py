@@ -251,6 +251,7 @@ class CompilerBackend:
         passes: list | None = None,
         pass_context: PassContext | None = None,
         measure_top_k: int | None = None,
+        shard=None,
     ) -> CompiledModule:
         """Compile a graph: run the mode's pass pipeline, schedule every
         accelerator node, lower executors, and build the execution plan.
@@ -262,10 +263,15 @@ class CompilerBackend:
         ``measure_top_k`` enables measured DSE: the K best modeled
         candidates per node are timed on the lowered executor and the
         wall-clock winner is selected (cached under a ``measured{K}`` key).
+        ``shard`` (a ``collective.ShardSpec``) compiles ONE mesh shard's
+        plan: the shard-partitioning pass runs before ``partition`` (see
+        ``repro.core.sharded`` for the executor side).
         """
         mode = resolve_mode(mode)
         pm = PassManager(
-            passes_for_mode(self.desc, mode) if passes is None else passes
+            passes_for_mode(self.desc, mode, shard=shard)
+            if passes is None
+            else passes
         )
         # never mutate a caller-supplied context: it may be shared across
         # backends or concurrent compiles

@@ -2,26 +2,65 @@
 
 ``make_production_mesh`` is a function (not a module-level constant) so
 importing this module never touches jax device state — required because
-the dry-run must set XLA_FLAGS before any jax initialization.
+the dry-run must set XLA_FLAGS before any jax initialization.  ``jax`` is
+imported lazily inside the functions for the same reason (and so the
+pure ``mesh_factorization`` helper stays importable from jax-free code —
+``repro.api`` uses it to default ``Target(devices=N)``'s mesh).
 """
 
 from __future__ import annotations
 
-import jax
+import warnings
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi-pod adds a leading 2-pod axis."""
+    import jax
+
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
+def mesh_factorization(
+    n_devices: int, model_parallel: int | None = None
+) -> tuple[int, int]:
+    """The elastic ``(data, model)`` factorization of ``n_devices``: the
+    model axis is the largest power-of-two divisor of ``n_devices`` that is
+    <= the requested ``model_parallel`` (default 16), the rest is data.
+
+    Odd/prime device counts have no power-of-two divisor except 1, so the
+    model axis silently collapses — a footgun when the caller explicitly
+    asked for model parallelism, hence the warning.
+    """
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    requested = model_parallel
+    # default: halve down from 16 so the model axis lands on the largest
+    # power-of-two divisor; an explicit request is clamped to the device
+    # count first (it may be a non-power-of-two that divides exactly)
+    mp = 16 if requested is None else max(1, min(requested, n_devices))
+    while n_devices % mp:
+        mp //= 2
+    if requested is not None and mp != requested:
+        warnings.warn(
+            f"mesh_factorization: model_parallel={requested} does not "
+            f"divide n_devices={n_devices}; using ({n_devices // mp} data, "
+            f"{mp} model) instead",
+            UserWarning,
+            stacklevel=2,
+        )
+    return (n_devices // mp, mp)
+
+
 def make_elastic_mesh(n_devices: int | None = None, model_parallel: int | None = None):
     """Best mesh for whatever devices are available (elastic resume):
-    model axis = largest power-of-two divisor <= requested, rest data."""
+    model axis = largest power-of-two divisor <= requested, rest data.
+    The chosen factorization is ``mesh.shape`` on the returned mesh; use
+    ``mesh_factorization`` directly for the pure computation (it warns
+    when an explicitly requested ``model_parallel`` cannot be honored)."""
+    import jax
+
     n = n_devices or len(jax.devices())
-    mp = model_parallel or min(16, n)
-    while n % mp:
-        mp //= 2
-    return jax.make_mesh((n // mp, mp), ("data", "model"))
+    data, model = mesh_factorization(n, model_parallel)
+    return jax.make_mesh((data, model), ("data", "model"))

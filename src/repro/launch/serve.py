@@ -33,7 +33,9 @@ def serve_zoo(args) -> None:
     from repro.serve import MicroBatcher
 
     model = get_model(args.zoo)
-    target = repro.Target.parse(args.target, batch_size=args.batch)
+    target = repro.Target.parse(
+        args.target, batch_size=args.batch, devices=getattr(args, "devices", 1)
+    )
     artifact = getattr(args, "artifact", None)
     if artifact:
         # AOT boot: restore the batched module from a saved artifact — no
@@ -89,9 +91,13 @@ def serve_zoo(args) -> None:
 
     n = max(len(outs), 1)
     cycles = module.modeled_cycles()  # largest bucket's plan
+    mesh_note = ""
+    if target.devices > 1:
+        dp, mp = target.resolved_mesh
+        mesh_note = f" on a (data={dp}, model={mp}) mesh"
     print(
         f"[serve] {model.name} on {target.describe()}: {boot_how} "
-        f"{len(buckets)} bucket plans {list(buckets)} in "
+        f"{len(buckets)} bucket plans {list(buckets)}{mesh_note} in "
         f"{t_boot * 1e3:.1f} ms (cold start)"
     )
     print(
@@ -104,7 +110,8 @@ def serve_zoo(args) -> None:
         f"[serve] modeled cycles/request at batch {buckets[-1]}: "
         f"{cycles['total'] / buckets[-1]:,.0f} "
         f"(accel {cycles['accel'] / buckets[-1]:,.0f} / "
-        f"host {cycles['host'] / buckets[-1]:,.0f})"
+        f"host {cycles['host'] / buckets[-1]:,.0f} / "
+        f"comm {cycles.get('comm', 0.0) / buckets[-1]:,.0f})"
     )
     if outs:
         print(f"[serve] sample output: {np.asarray(outs[0][0]).ravel()[:8]}")
@@ -170,6 +177,13 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument(
+        "--devices",
+        type=int,
+        default=1,
+        help="mesh size for --zoo: compile one ExecutionPlan per shard of "
+        "a (data, model) mesh and serve through the sharded executor",
+    )
     ap.add_argument(
         "--deadline-ms",
         type=float,

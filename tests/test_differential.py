@@ -345,6 +345,40 @@ def test_seeded_differential_sweep_pallas(seed):
     check_conformance(maker(rng), seed=4000 + seed, use_pallas=True)
 
 
+# -- sharded arm: sharded == single-device == jnp reference ------------------
+
+
+def check_sharded_conformance(spec: dict, seed: int, devices: int):
+    """The same three-way oracle through ``Target(devices=N)``: the mesh
+    executor's output must be bit-exact with the single-device plan AND
+    match the independent jnp reference."""
+    build, feeds = _materialize(spec, seed)
+    reference = jnp_reference(build(), feeds)
+    for acc in ACCELERATORS:
+        single = repro.compile(build(), _target(acc, "optimized")).run(feeds)[0]
+        target = Target(
+            acc, mode="optimized", cache=False, use_mip=False,
+            devices=devices, mesh=(1, devices),
+        )
+        sharded = repro.compile(build(), target).run(feeds)[0]
+        _assert_same(
+            sharded, single, f"sharded[{acc}@{devices}]-vs-single", spec
+        )
+        _assert_same(
+            sharded, reference, f"sharded[{acc}@{devices}]-vs-jnp", spec
+        )
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_seeded_sharded_differential_sweep(seed):
+    """Random dense/conv chains on a random mesh in {1, 2, 4}: the sharded
+    plans must agree with the single-device plan and the jnp reference."""
+    rng = np.random.default_rng(5000 + seed)
+    maker = SPEC_MAKERS[seed % len(SPEC_MAKERS)]
+    devices = int(rng.choice([1, 2, 4]))
+    check_sharded_conformance(maker(rng), seed=6000 + seed, devices=devices)
+
+
 # -- hypothesis exploration (CI installs the `test` extra) -------------------
 
 if HAVE_HYPOTHESIS:

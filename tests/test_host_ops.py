@@ -70,6 +70,9 @@ CASES = [
     _case("max_pool2d",
           lambda: ir.max_pool2d(ir.input_((2, 6, 6, 3), "int8", name="x"), 2, 2),
           {"x": _i8(2, 6, 6, 3)}),
+    _case("shard_slice",
+          lambda: ir.shard_slice(ir.input_((4, 8), "int32", name="x"), 1, 1, 2),
+          {"x": _i32(4, 8)}),
 ]
 
 

@@ -1,0 +1,59 @@
+"""Elastic mesh factorization: the pure ``(data, model)`` rule behind both
+``launch.mesh.make_elastic_mesh`` and ``Target(devices=N)`` defaults —
+including the odd/prime device counts where the model axis silently
+collapsed to 1 before the warning was added."""
+
+import warnings
+
+import pytest
+
+from repro.launch.mesh import mesh_factorization
+
+
+def test_even_counts_take_the_largest_pow2_model_axis():
+    assert mesh_factorization(2) == (1, 2)
+    assert mesh_factorization(4) == (1, 4)
+    assert mesh_factorization(8) == (1, 8)
+    assert mesh_factorization(64) == (4, 16)  # model axis capped at 16
+    assert mesh_factorization(12) == (3, 4)
+
+
+def test_one_device_is_the_trivial_mesh():
+    assert mesh_factorization(1) == (1, 1)
+    assert mesh_factorization(1, model_parallel=1) == (1, 1)
+
+
+@pytest.mark.parametrize("n", [3, 5, 7, 11, 13])
+def test_odd_and_prime_counts_collapse_to_data_only(n):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # implicit default must NOT warn
+        assert mesh_factorization(n) == (n, 1)
+
+
+@pytest.mark.parametrize("n", [3, 5, 7])
+def test_explicit_model_parallel_on_odd_count_warns(n):
+    """The old behavior silently picked model=1 when the user explicitly
+    asked for model parallelism an odd count cannot honor — now it warns
+    AND exposes the chosen factorization."""
+    with pytest.warns(UserWarning, match="does not\n?.*divide|does not divide"):
+        data, model = mesh_factorization(n, model_parallel=2)
+    assert (data, model) == (n, 1)
+
+
+def test_honored_explicit_request_does_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert mesh_factorization(8, model_parallel=2) == (4, 2)
+        assert mesh_factorization(8, model_parallel=8) == (1, 8)
+
+
+def test_oversized_request_clamps_then_warns():
+    with pytest.warns(UserWarning):
+        assert mesh_factorization(4, model_parallel=8) == (1, 4)
+
+
+def test_invalid_count_raises():
+    with pytest.raises(ValueError, match="n_devices"):
+        mesh_factorization(0)
+    with pytest.raises(ValueError, match="n_devices"):
+        mesh_factorization(-2)

@@ -1,0 +1,344 @@
+"""Sharded compilation + mesh executor: ``Target(devices=N)`` must produce
+per-shard ExecutionPlans whose mesh-wide execution is bit-exact with the
+``devices=1`` plan across the zoo x {gemmini, edge_npu} x mode matrix
+(including batched buckets and Pallas kernels), ``devices=1`` must stay an
+exact identity (zero collective nodes, zero modeled comm), and the modeled
+interconnect cost must pin the documented ring formulas per accelerator.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import CompileOptions, Target, TargetError
+from repro.core import ir
+from repro.core.collective import (
+    CollectiveError,
+    CollectiveSession,
+    ShardSpec,
+    collective_cycles,
+    session_scope,
+)
+from repro.core.ir import COLLECTIVE_OPS
+from repro.core.pipeline import PUBLIC_MODES
+from repro.core.registry import REGISTRY
+from repro.core.sharded import ShardedModule
+from repro.core.zoo import ZOO, get_model
+
+NUMPY_EXACT = ("gemmini", "edge_npu")
+
+
+def _target(acc: str, mode: str = "optimized", **kw) -> Target:
+    return Target(acc, mode=mode, cache=False, use_mip=False, **kw)
+
+
+def _assert_outputs_equal(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert np.array_equal(x, y)
+
+
+# -- the acceptance matrix: sharded == single-device, bit for bit -------------
+
+
+@pytest.mark.parametrize("mode", PUBLIC_MODES)
+@pytest.mark.parametrize(
+    "model_name,acc",
+    [(m.name, a) for m in ZOO.values() for a in m.accelerators if a in NUMPY_EXACT],
+)
+def test_sharded_bit_exact_vs_single_device(model_name, acc, mode):
+    model = get_model(model_name)
+    feeds = model.feeds(seed=0)
+    single = repro.compile(model_name, _target(acc, mode))
+    sharded = repro.compile(model_name, _target(acc, mode, devices=2))
+    assert isinstance(sharded, ShardedModule)
+    assert sharded.devices == 2
+    _assert_outputs_equal(single.run(feeds), sharded.run(feeds))
+
+
+def test_sharded_devices_4_bit_exact():
+    model = get_model("toycar_mlp")
+    feeds = model.feeds(seed=3)
+    single = repro.compile("toycar_mlp", _target("gemmini"))
+    sharded = repro.compile(
+        "toycar_mlp", _target("gemmini", devices=4, mesh=(1, 4))
+    )
+    assert sharded.mesh == (1, 4)
+    _assert_outputs_equal(single.run(feeds), sharded.run(feeds))
+
+
+@pytest.mark.parametrize("mesh", [(2, 1), (1, 2), (2, 2)])
+def test_sharded_batched_buckets_bit_exact(mesh):
+    """Batched sharding: every bucket becomes a ShardedModule; the data
+    axis splits buckets it divides (bucket 1 falls back to tensor-parallel
+    only) and outputs still match the unsharded batched module."""
+    model = get_model("toycar_mlp")
+    opts = CompileOptions(batch_buckets=(1, 4))
+    single = repro.compile("toycar_mlp", _target("gemmini"), options=opts)
+    sharded = repro.compile(
+        "toycar_mlp", _target("gemmini", mesh=mesh), options=opts
+    )
+    dp = mesh[0]
+    for b, sub in sharded.modules.items():
+        assert isinstance(sub, ShardedModule)
+        want_dp = dp if dp > 1 and b % dp == 0 else 1
+        assert sub.mesh == (want_dp, mesh[1])
+    feeds_list = [model.feeds(seed=s) for s in range(6)]
+    _assert_outputs_equal(
+        [o for r in single.run_many(feeds_list) for o in r],
+        [o for r in sharded.run_many(feeds_list) for o in r],
+    )
+
+
+def test_sharded_with_pallas_bit_exact():
+    model = get_model("mlp_tiny")
+    feeds = model.feeds(seed=1)
+    single = repro.compile("mlp_tiny", _target("edge_npu", use_pallas=True))
+    sharded = repro.compile(
+        "mlp_tiny", _target("edge_npu", use_pallas=True, devices=2)
+    )
+    _assert_outputs_equal(single.run(feeds), sharded.run(feeds))
+
+
+def test_sharded_artifact_round_trip(tmp_path):
+    model = get_model("toycar_mlp")
+    feeds = model.feeds(seed=0)
+    sharded = repro.compile("toycar_mlp", _target("edge_npu", devices=2))
+    repro.save(sharded, tmp_path / "art")
+    loaded = repro.load(tmp_path / "art")
+    assert isinstance(loaded, ShardedModule)
+    assert loaded.mesh == sharded.mesh
+    assert loaded.signature == sharded.signature
+    _assert_outputs_equal(sharded.run(feeds), loaded.run(feeds))
+
+
+def test_run_many_and_concurrent_runs():
+    """The sharded executor must survive concurrent callers: each run gets
+    its own CollectiveSession + fresh shard threads."""
+    model = get_model("toycar_mlp")
+    sharded = repro.compile("toycar_mlp", _target("gemmini", devices=2))
+    single = repro.compile("toycar_mlp", _target("gemmini"))
+    feeds_list = [model.feeds(seed=s) for s in range(4)]
+    want = [single.run(f) for f in feeds_list]
+    got = sharded.run_many(feeds_list)
+    for w, g in zip(want, got):
+        _assert_outputs_equal(w, g)
+
+    results: dict[int, list] = {}
+
+    def call(i):
+        results[i] = sharded.run(feeds_list[i])
+
+    threads = [threading.Thread(target=call, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for i, w in enumerate(want):
+        _assert_outputs_equal(w, results[i])
+
+
+# -- devices=1 identity (satellite: golden zero-collective guarantee) ---------
+
+
+def test_devices_1_compiles_zero_collectives():
+    """A devices=1 target must be IDENTICAL to today's output: no
+    collective nodes in any plan, and zero modeled comm cycles."""
+    for model_name in ("mlp_tiny", "toycar_mlp"):
+        module = repro.compile(model_name, _target("gemmini"))
+        ops = {n.op for n in module.graph.toposort()}
+        assert not (ops & COLLECTIVE_OPS)
+        assert "shard_slice" not in ops
+        cycles = module.modeled_cycles()
+        assert cycles["comm"] == 0.0
+        assert cycles["total"] == cycles["accel"] + cycles["host"]
+
+
+def test_sharded_module_devices_1_is_plain_dispatch():
+    module = repro.compile("mlp_tiny", _target("gemmini"))
+    wrapped = ShardedModule(
+        shards={(0, 0): module},
+        mesh=(1, 1),
+        signature=module.input_signature(),
+    )
+    feeds = get_model("mlp_tiny").feeds(seed=0)
+    _assert_outputs_equal(module.run(feeds), wrapped.run(feeds))
+
+
+# -- golden interconnect cost formulas (satellite) ----------------------------
+
+
+@pytest.mark.parametrize("acc", ("gemmini", "edge_npu", "tpu_v5e"))
+def test_all_reduce_cost_formula_golden(acc):
+    """Pin the modeled ring all-reduce cost: 2 * (K-1) * (B/K / link_bw +
+    hop latency), parameterized on the accelerator's interconnect."""
+    arch = REGISTRY.get(acc).arch
+    B, K = 4096, 4
+    want = 2.0 * (K - 1) * ((B / K) / arch.link_bytes_per_cycle + arch.link_hop_cycles)
+    assert collective_cycles("all_reduce", B, K, arch) == pytest.approx(want)
+    # gather/scatter are exactly half an all-reduce
+    assert collective_cycles("all_gather", B, K, arch) == pytest.approx(want / 2)
+    assert collective_cycles("reduce_scatter", B, K, arch) == pytest.approx(want / 2)
+    # one participant -> free (no links crossed)
+    assert collective_cycles("all_reduce", B, 1, arch) == 0.0
+
+
+def test_interconnects_differ_across_accelerators():
+    """The cost model must actually distinguish the targets: the same
+    all-reduce is cheapest on the tpu ICI and dearest on the edge board."""
+    costs = {
+        acc: collective_cycles("all_reduce", 1 << 16, 4, REGISTRY.get(acc).arch)
+        for acc in ("gemmini", "edge_npu", "tpu_v5e")
+    }
+    assert costs["tpu_v5e"] < costs["gemmini"] < costs["edge_npu"]
+
+
+def test_modeled_comm_charged_on_sharded_plans():
+    sharded = repro.compile("toycar_mlp", _target("edge_npu", devices=2))
+    cycles = sharded.modeled_cycles()
+    assert cycles["comm"] > 0.0
+    assert cycles["total"] == pytest.approx(
+        cycles["accel"] + cycles["host"] + cycles["comm"]
+    )
+
+
+# -- collective runtime unit tests --------------------------------------------
+
+
+def test_collective_session_exchange_and_reuse():
+    session = CollectiveSession()
+    combine = lambda vals: np.concatenate(vals)  # noqa: E731
+    results = {}
+
+    def rank(r):
+        with session_scope(session):
+            a = session.exchange("g", r, 2, np.full(2, r), combine)
+            b = session.exchange("g", r, 2, np.full(2, 10 + r), combine)
+            results[r] = (a, b)
+
+    threads = [threading.Thread(target=rank, args=(r,)) for r in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for r in range(2):
+        # the group id is reusable across sequential calls on one session
+        assert np.array_equal(results[r][0], [0, 0, 1, 1])
+        assert np.array_equal(results[r][1], [10, 10, 11, 11])
+
+
+def test_collective_abort_unblocks_waiters():
+    session = CollectiveSession()
+    errors = []
+
+    def waiter():
+        try:
+            session.exchange("g", 0, 2, np.zeros(1), lambda v: v[0])
+        except CollectiveError as e:
+            errors.append(e)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    session.abort(RuntimeError("peer died"))
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert len(errors) == 1
+
+
+def test_shard_failure_propagates_not_deadlocks():
+    """A shard whose feeds are torn must abort the session and surface ONE
+    real error to the caller instead of hanging the peers."""
+    sharded = repro.compile("toycar_mlp", _target("edge_npu", devices=2))
+    feeds = get_model("toycar_mlp").feeds(seed=0)
+    bad = dict(feeds)
+    name = next(iter(bad))
+    bad[name] = np.asarray(bad[name])  # valid shape; break a shard instead
+    shard = sharded.shards[(0, 1)]
+    orig = shard.run
+
+    def explode(_feeds):
+        raise RuntimeError("injected shard failure")
+
+    shard.run = explode
+    try:
+        with pytest.raises(RuntimeError, match="injected shard failure"):
+            sharded.run(bad)
+    finally:
+        shard.run = orig
+
+
+def test_collective_outside_session_raises():
+    sharded = repro.compile("toycar_mlp", _target("edge_npu", devices=2))
+    feeds = get_model("toycar_mlp").feeds(seed=0)
+    with pytest.raises(CollectiveError, match="outside a ShardedModule"):
+        sharded.shards[(0, 0)].run(feeds)
+
+
+def test_shard_spec_validation():
+    assert ShardSpec(data=2, model=4).devices == 8
+    with pytest.raises(ValueError):
+        ShardSpec(data=0)
+    with pytest.raises(ValueError):
+        ShardSpec(data=2, model=2, data_rank=2)
+
+
+# -- Target surface -----------------------------------------------------------
+
+
+def test_target_mesh_validation():
+    assert Target("gemmini", devices=4).resolved_mesh == (1, 4)
+    assert Target("gemmini", mesh=(2, 2)).devices == 4
+    assert Target("gemmini", devices=1).resolved_mesh == (1, 1)
+    with pytest.raises(TargetError, match="mesh"):
+        Target("gemmini", devices=4, mesh=(2, 4))
+    with pytest.raises(TargetError, match="devices"):
+        Target("gemmini", devices=0)
+    with pytest.raises(TargetError, match="mesh"):
+        Target("gemmini", mesh=(2,))
+
+
+def test_unbatched_data_parallel_mesh_rejected():
+    with pytest.raises(ValueError, match="batch buckets"):
+        repro.compile("mlp_tiny", _target("gemmini", mesh=(2, 1)))
+
+
+def test_sharded_rejects_custom_pass_list():
+    with pytest.raises(ValueError, match="passes"):
+        repro.compile(
+            "mlp_tiny",
+            _target("gemmini", devices=2),
+            options=CompileOptions(passes=[]),
+        )
+
+
+def test_shard_slice_and_collective_ir_builders():
+    x = ir.input_((4, 8), "int32", name="x")
+    s = ir.shard_slice(x, 1, 0, 2)
+    assert s.shape == (4, 4)
+    g = ir.all_gather(s, 1, group="g", rank=0, parts=2)
+    assert g.shape == (4, 8)
+    r = ir.all_reduce(x, group="r", rank=1, parts=2)
+    assert r.shape == x.shape
+    rs = ir.reduce_scatter(x, 0, group="rs", rank=0, parts=2)
+    assert rs.shape == (2, 8)
+    with pytest.raises(ValueError):
+        ir.shard_slice(x, 1, 0, 3)  # 8 % 3 != 0
+
+
+def test_clone_graph_preserves_structure():
+    model = get_model("mlp_tiny")
+    g = model.build()
+    clone = ir.clone_graph(g)
+    order_a, order_b = g.toposort(), clone.toposort()
+    assert len(order_a) == len(order_b)
+    for a, b in zip(order_a, order_b):
+        assert a is not b
+        assert (a.op, a.name, a.shape, a.dtype) == (b.op, b.name, b.shape, b.dtype)
+    feeds = model.feeds(seed=0)
+    _assert_outputs_equal(
+        ir.execute_graph(g, feeds), ir.execute_graph(clone, feeds)
+    )

@@ -1,0 +1,182 @@
+"""Decode-serving benchmark: continuous batching vs the naive sequential loop.
+
+For each (decode-zoo model, accelerator) cell this harness serves the same
+request pool two ways and reports tokens/s:
+
+  * **sequential** — the naive loop: one request at a time, prefill then a
+    single-sample decode plan stepped to completion before the next request
+    is admitted;
+  * **continuous** — ``repro.serve.ContinuousBatchingEngine``: one batched
+    decode plan over a fixed slot count, KV state in a block-based pool,
+    finished slots backfilled with prefills mid-flight.
+
+Functional correctness gates the timing: both paths must emit bit-identical
+token streams for every request (the batched plan, the block pool, and the
+scheduler never perturb the math).
+
+Results land in ``BENCH_decode.json``.  ``--smoke`` runs attn_decode/gemmini
+with a small pool (CI); the full run also covers edge_npu.  ``--gate``
+asserts the tentpole claim: continuous batching reaches >= 2x tokens/s over
+the sequential loop on attn_decode/gemmini.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+from pathlib import Path
+
+import repro
+from repro.core.zoo import decode_model_names, get_decode_model
+from repro.serve import ContinuousBatchingEngine, EngineConfig, random_requests
+from repro.serve.continuous import sequential_generate
+
+ACCELERATORS = ("gemmini", "edge_npu")
+SMOKE_ACCELERATORS = ("gemmini",)
+GATE_CELL = ("attn_decode", "gemmini")
+GATE_SPEEDUP = 2.0
+
+
+def bench_cell(model_name: str, acc: str, *, smoke: bool) -> dict:
+    model = get_decode_model(model_name)
+    target = repro.Target(acc, mode="optimized", cache=False)
+    cfg = EngineConfig(
+        batch=8,
+        prompt_len=8,
+        max_new_tokens=12 if smoke else 24,
+    )
+    n_requests = 16 if smoke else 48
+
+    # -- correctness gate: continuous == sequential, token for token --------
+    reqs_cont = random_requests(model, n_requests, cfg.prompt_len, seed=42)
+    reqs_seq = random_requests(model, n_requests, cfg.prompt_len, seed=42)
+    engine = ContinuousBatchingEngine(model, target, cfg)
+    cont = engine.run(reqs_cont)
+    seq = sequential_generate(model, target, reqs_seq, cfg)
+    for a, b in zip(reqs_cont, reqs_seq):
+        assert a.tokens == b.tokens, (
+            f"{model_name}/{acc}: continuous batching diverges from the "
+            f"sequential loop at request {a.rid} "
+            f"({a.tokens[:4]} vs {b.tokens[:4]})"
+        )
+    assert engine.pool.n_used == 0, (
+        f"{model_name}/{acc}: block pool leaked "
+        f"{engine.pool.n_used} blocks after drain"
+    )
+
+    # -- timing: best of a few repeats, same pool each rep ------------------
+    reps = 2 if smoke else 3
+    best_cont, best_seq = cont, seq
+    for _ in range(reps - 1):
+        r = engine.run(random_requests(model, n_requests, cfg.prompt_len, seed=42))
+        if r.tokens_per_s > best_cont.tokens_per_s:
+            best_cont = r
+        s = sequential_generate(
+            model, target,
+            random_requests(model, n_requests, cfg.prompt_len, seed=42), cfg,
+        )
+        if s.tokens_per_s > best_seq.tokens_per_s:
+            best_seq = s
+    return {
+        "model": model_name,
+        "accelerator": acc,
+        "n_requests": n_requests,
+        "batch": cfg.batch,
+        "prompt_len": cfg.prompt_len,
+        "max_new_tokens": cfg.max_new_tokens,
+        "total_new_tokens": best_cont.total_new_tokens,
+        "sequential": {
+            "tokens_per_s": best_seq.tokens_per_s,
+            "wall_s": best_seq.wall_s,
+            "decode_steps": best_seq.decode_steps,
+        },
+        "continuous": {
+            "tokens_per_s": best_cont.tokens_per_s,
+            "wall_s": best_cont.wall_s,
+            "decode_steps": best_cont.decode_steps,
+            "prefills": best_cont.prefills,
+            "peak_occupancy": best_cont.peak_occupancy,
+            "n_blocks": best_cont.n_blocks,
+            "block_size": best_cont.block_size,
+        },
+        "speedup_tokens_per_s": best_cont.tokens_per_s / best_seq.tokens_per_s,
+    }
+
+
+def run(models: list[str], accelerators: tuple[str, ...], *, smoke: bool,
+        gate: bool, out: Path) -> dict:
+    rows = []
+    for name in models:
+        model = get_decode_model(name)
+        for acc in accelerators:
+            if acc not in model.accelerators:
+                continue
+            row = bench_cell(name, acc, smoke=smoke)
+            rows.append(row)
+            print(
+                f"{row['model']:>14} {row['accelerator']:>8} "
+                f"sequential={row['sequential']['tokens_per_s']:>8.0f} tok/s "
+                f"continuous={row['continuous']['tokens_per_s']:>8.0f} tok/s "
+                f"({row['speedup_tokens_per_s']:>5.2f}x) "
+                f"peak pool occupancy "
+                f"{row['continuous']['peak_occupancy']:.1%}"
+            )
+    best = max(rows, key=lambda r: r["speedup_tokens_per_s"])
+    payload = {
+        "bench": "decode_continuous_vs_sequential",
+        "smoke": smoke,
+        "host": platform.machine(),
+        "rows": rows,
+        "summary": {
+            "best_speedup_tokens_per_s": best["speedup_tokens_per_s"],
+            "best_cell": (best["model"], best["accelerator"]),
+        },
+    }
+    out.write_text(json.dumps(payload, indent=2))
+    print(
+        f"\nwrote {out} ({len(rows)} cells); best continuous-batching speedup "
+        f"{best['speedup_tokens_per_s']:.2f}x on "
+        f"{best['model']}/{best['accelerator']}"
+    )
+
+    if gate:
+        anchor = next(
+            (r for r in rows
+             if (r["model"], r["accelerator"]) == GATE_CELL),
+            None,
+        )
+        assert anchor is not None, f"gate cell {GATE_CELL} was not benchmarked"
+        assert anchor["speedup_tokens_per_s"] >= GATE_SPEEDUP, (
+            f"continuous batching must beat the sequential prefill-per-request "
+            f"loop by >= {GATE_SPEEDUP}x tokens/s on "
+            f"{GATE_CELL[0]}/{GATE_CELL[1]} "
+            f"(got {anchor['speedup_tokens_per_s']:.2f}x)"
+        )
+        print(f"gate passed: {anchor['speedup_tokens_per_s']:.2f}x >= "
+              f"{GATE_SPEEDUP}x on {GATE_CELL[0]}/{GATE_CELL[1]}")
+    return payload
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="attn_decode/gemmini with a small pool (CI)")
+    ap.add_argument("--gate", action="store_true",
+                    help=f"assert continuous >= {GATE_SPEEDUP}x sequential "
+                         f"tokens/s on {GATE_CELL[0]}/{GATE_CELL[1]}")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help=f"decode-zoo models (default: all; "
+                         f"available: {decode_model_names()})")
+    ap.add_argument("--out", type=Path, default=Path("BENCH_decode.json"))
+    args = ap.parse_args(argv)
+    models = args.models or list(decode_model_names())
+    accelerators = SMOKE_ACCELERATORS if args.smoke else ACCELERATORS
+    for m in models:
+        get_decode_model(m)  # fail fast on typos
+    return run(models, accelerators, smoke=args.smoke, gate=args.gate,
+               out=args.out)
+
+
+if __name__ == "__main__":
+    main()

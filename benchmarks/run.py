@@ -11,6 +11,7 @@ import time
 def main() -> None:
     from benchmarks import (
         coldstart_bench,
+        decode_bench,
         integration_bench,
         kernels_bench,
         mesh_bench,
@@ -68,6 +69,18 @@ def main() -> None:
             (time.perf_counter() - t0) * 1e6,
             f"cells={len(serving['rows'])};"
             f"best_speedup={serving['summary']['best_speedup_req_s']:.2f}x",
+        )
+    )
+
+    # -- decode: continuous batching vs sequential prefill-per-request --------
+    t0 = time.perf_counter()
+    decode = decode_bench.main(["--smoke"])
+    csv_rows.append(
+        (
+            "decode_continuous_vs_sequential",
+            (time.perf_counter() - t0) * 1e6,
+            f"cells={len(decode['rows'])};"
+            f"best_speedup={decode['summary']['best_speedup_tokens_per_s']:.2f}x",
         )
     )
 

@@ -358,9 +358,13 @@ def _graph_for(model, example_inputs, params) -> Graph:
             )
         return model
     if isinstance(model, str):
-        from repro.core.zoo import get_model
+        from repro.core.zoo import DECODE_ZOO, get_decode_model, get_model
 
         _check_zoo_args(example_inputs, params)
+        if model in DECODE_ZOO:
+            # the decode-step form; prefill compiles via
+            # get_decode_model(name).trace(seq=P) passed as a Graph
+            return get_decode_model(model).trace()
         return get_model(model).trace()
     _check_callable_args(model, example_inputs)
     from repro.frontend import trace_model
@@ -397,8 +401,15 @@ def _batched_graph_builder(model, example_inputs, params):
     per bucket: zoo names re-trace their batched form, callables re-trace
     with batch-widened example inputs.  Prebuilt graphs are fixed-shape."""
     if isinstance(model, str):
-        from repro.core.zoo import get_model
+        from repro.core.zoo import DECODE_ZOO, get_model
 
+        if model in DECODE_ZOO:
+            raise ValueError(
+                "stateful decode models do not use batch buckets: the "
+                "decode batch is the engine's static slot count — compile "
+                "get_decode_model(name).trace(batch=B) directly, or serve "
+                "via repro.serve.ContinuousBatchingEngine"
+            )
         _check_zoo_args(example_inputs, params)
         zoo_model = get_model(model)
         # the hand-built twin is the cheap per-sample reference: it is

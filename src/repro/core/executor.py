@@ -24,6 +24,7 @@ from repro.core.ir import (
     Node,
     execute_node,
     gelu_ref,
+    kv_append_ref,
     max_pool2d_ref,
 )
 from repro.core.simulator import simulate
@@ -138,6 +139,10 @@ def compile_host_op(n: Node) -> Callable[..., np.ndarray]:
             return (e / np.sum(e, axis=ax, keepdims=True)).astype(dtype)
 
         return _softmax
+    if op == "kv_cache_read":
+        return lambda cache: np.asarray(cache)
+    if op == "kv_cache_append":
+        return kv_append_ref
     # anything else (dense/conv left on the host, exotic ops): fall back to
     # the reference interpreter for this node only.
     return lambda *ins, _n=n: execute_node(_n, list(ins))
@@ -644,6 +649,16 @@ class CompiledModule:
                 # per batch instance; everything else folds batch into M
                 # and is already covered by the schedule itself.
                 accel += rep.total_cycles * gemm_instances(n)
+            elif n.op == "kv_cache_read":
+                # streams the whole cache once into the attention GEMMs
+                nbytes = math.prod(n.shape) * dtype_bytes(n.dtype)
+                host += nbytes * arch.host_preproc_cycles_per_byte
+            elif n.op == "kv_cache_append":
+                # modeled as an in-place row write: only the update payload
+                # moves (the functional numpy copy is an emulation artifact)
+                upd = n.inputs[1]
+                nbytes = math.prod(upd.shape) * dtype_bytes(upd.dtype)
+                host += nbytes * arch.host_epilogue_cycles_per_byte
             elif n.op in _LAYOUT_OPS and n.op not in FREE_VIEW_OPS:
                 nbytes = math.prod(n.shape) * dtype_bytes(n.dtype)
                 host += nbytes * arch.host_preproc_cycles_per_byte

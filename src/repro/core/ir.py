@@ -54,6 +54,36 @@ GENERALIZED_OPS = {"generalized_dense", "generalized_conv2d"}
 # host op) is their shard-local counterpart.
 COLLECTIVE_OPS = {"all_gather", "all_reduce", "reduce_scatter"}
 
+# Stateful KV-cache ops for LM decode.  The IR stays functional: the cache
+# is an ordinary graph input and ``kv_cache_append`` returns the updated
+# cache as an ordinary output — the serve engine threads outputs back into
+# the next step's feeds (``CacheSpec.state`` names the wiring).  They are
+# host-resident by contract: the partitioner never offloads them, and the
+# shard pass refuses graphs that contain them (capability negotiation for
+# accelerators that only see stateless GEMM regions).
+CACHE_OPS = {"kv_cache_read", "kv_cache_append"}
+HOST_OPS |= CACHE_OPS
+
+
+@dataclass(frozen=True)
+class CacheSpec:
+    """Decode-state contract carried on a :class:`Graph`.
+
+    ``state`` maps each cache *input* name to the graph *output* index that
+    carries its updated value, so a runtime can feed step N's cache outputs
+    straight back as step N+1's cache inputs without knowing the model.
+    ``layout`` is ``"LD"`` (``[max_len, d]`` per sample) or ``"BLD"`` with a
+    leading batch dim; ``dtype`` is the stored KV dtype (int8-quantized KV
+    per ``models/cache.py`` by default).
+    """
+
+    max_len: int
+    dtype: str = "int8"
+    layout: str = "LD"
+    state: tuple[tuple[str, int], ...] = ()
+    pos_input: str = "pos"
+    mask_input: str = "mask"
+
 
 @dataclass
 class Node:
@@ -101,6 +131,8 @@ class Graph:
 
     outputs: list[Node]
     name: str = "graph"
+    # decode-state contract for stateful (KV-cache) graphs; None otherwise
+    cache_spec: CacheSpec | None = None
     _order: list[Node] | None = field(
         default=None, init=False, repr=False, compare=False
     )
@@ -361,6 +393,67 @@ def reduce_scatter(x: Node, axis: int, *, group: str, rank: int, parts: int) -> 
     return _collective("reduce_scatter", x, shape, ax, group, rank, parts)
 
 
+def kv_cache_read(cache: Node) -> Node:
+    """Materialize the full cache for attention (identity payload; marks the
+    state consumption so it is costed and never folded into accel regions)."""
+    return Node("kv_cache_read", [cache], shape=cache.shape, dtype=cache.dtype)
+
+
+def kv_cache_append(cache: Node, update: Node, pos: Node) -> Node:
+    """Functional append: write ``update``'s rows into ``cache`` along the
+    sequence axis (-2) starting at ``pos``, returning the updated cache.
+
+    Shapes: ``cache[..., L, D]``, ``update[..., S, D]`` with ``S <= L`` and
+    matching leading/feature dims; ``pos`` is a scalar int32, or ``[B]`` for
+    per-request positions on batched ``[B, L, D]`` caches (continuous
+    batching appends each slot at its own length).  Writes must stay in
+    bounds — the executor raises rather than clamping.
+    """
+    if update.dtype != cache.dtype:
+        raise ValueError(
+            f"kv_cache_append dtype mismatch: cache {cache.dtype} vs update {update.dtype}"
+        )
+    if (
+        len(update.shape) != len(cache.shape)
+        or update.shape[:-2] != cache.shape[:-2]
+        or update.shape[-1] != cache.shape[-1]
+        or update.shape[-2] > cache.shape[-2]
+    ):
+        raise ValueError(
+            f"kv_cache_append shape mismatch: cache {cache.shape} vs update {update.shape}"
+        )
+    if pos.shape not in ((), cache.shape[:-2]):
+        raise ValueError(
+            f"kv_cache_append pos shape {pos.shape} for cache {cache.shape}"
+        )
+    return Node(
+        "kv_cache_append", [cache, update, pos], shape=cache.shape, dtype=cache.dtype
+    )
+
+
+def kv_append_ref(cache: np.ndarray, update: np.ndarray, pos: np.ndarray) -> np.ndarray:
+    """The single append definition every execution path shares (interpreter
+    and planned host closure must be bit-identical)."""
+    out = np.array(cache)
+    s = update.shape[-2]
+    pos = np.asarray(pos)
+    limit = cache.shape[-2]
+    if pos.ndim == 0:
+        p = int(pos)
+        if p < 0 or p + s > limit:
+            raise ValueError(f"kv_cache_append out of bounds: pos {p} + {s} > {limit}")
+        out[..., p : p + s, :] = update
+    else:
+        for b, p in enumerate(pos.astype(np.int64).ravel()):
+            p = int(p)
+            if p < 0 or p + s > limit:
+                raise ValueError(
+                    f"kv_cache_append out of bounds: pos {p} + {s} > {limit} (slot {b})"
+                )
+            out[b, ..., p : p + s, :] = update[b]
+    return out
+
+
 def add(a: Node, b: Node) -> Node:
     return Node("add", [a, b], shape=_binary_shape(a, b), dtype=a.dtype)
 
@@ -477,6 +570,10 @@ def execute_node(n: Node, inputs: list[np.ndarray]) -> np.ndarray:
                 f"{op} with parts > 1 executes via a CollectiveSession"
             )
         return inputs[0].astype(n.dtype)
+    if op == "kv_cache_read":
+        return np.asarray(inputs[0])
+    if op == "kv_cache_append":
+        return kv_append_ref(inputs[0], inputs[1], inputs[2])
     if op == "add":
         return inputs[0] + inputs[1]
     if op == "sub":
@@ -535,7 +632,11 @@ def clone_graph(graph: Graph) -> Graph:
             value=n.value,
         )
         mapping[n] = c
-    return Graph([mapping[o] for o in graph.outputs], name=graph.name)
+    return Graph(
+        [mapping[o] for o in graph.outputs],
+        name=graph.name,
+        cache_spec=graph.cache_spec,
+    )
 
 
 def execute_graph(graph: Graph, feeds: dict[str, np.ndarray]) -> list[np.ndarray]:

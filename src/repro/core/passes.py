@@ -372,6 +372,7 @@ def _partition(graph: Graph, ctx: PassContext) -> int:
         if (
             base in supported
             and n.op != "input"
+            and n.op not in ir.CACHE_OPS  # state stays host-resident
             and desc.supports_dtype(n.op, operand_dtype)
         ):
             n.target = "accel"
@@ -615,6 +616,18 @@ def make_shard_pass(spec: ShardSpec) -> GraphPass:
 
     def _shard(graph: Graph, ctx: PassContext) -> int:
         desc: AcceleratorDescription = ctx.desc
+        stateful = [n.name for n in graph.toposort() if n.op in ir.CACHE_OPS]
+        if stateful:
+            # capability negotiation: KV-cache state is host-resident and
+            # per-request — splitting it across a mesh would need state
+            # placement the runtime doesn't model yet.  Refuse loudly
+            # rather than emit silently-wrong replicated plans.
+            raise ValueError(
+                "stateful decode graphs cannot be shard-partitioned: "
+                f"graph {graph.name!r} carries KV-cache ops {stateful}; "
+                "compile with Target(devices=1) and scale decode via "
+                "repro.serve.ContinuousBatchingEngine slots instead"
+            )
         changed = 0
         if spec.model > 1:
             consumers: dict[Node, list[Node]] = {}

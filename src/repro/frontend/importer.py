@@ -57,7 +57,7 @@ SUPPORTED_PRIMITIVES: dict[str, str] = {
     "mul": "mul / dequantize (astype-float * scale idiom)",
     "max": "relu (maximum(x, 0) idiom)",
     "custom_jvp_call": "(inlined: jax.nn.relu, ...)",
-    "pjit": "(named: relu / clip / round; others inlined)",
+    "pjit": "(named: relu / clip / round / kv_cache_read / kv_cache_append; others inlined)",
     "convert_element_type": "quantize / requantize chain sinks",
     "div": "quantize interior (round(x / scale) idiom)",
     "round": "quantize / requantize interior",
@@ -413,6 +413,11 @@ class _Importer:
         shape, dtype = tuple(aval.shape), str(aval.dtype)
         if name == "relu":
             return [ir.relu(self.realize(args[0]))]
+        if name == "kv_cache_read" and len(args) == 1:
+            return [ir.kv_cache_read(self.realize(args[0]))]
+        if name == "kv_cache_append" and len(args) == 3:
+            cache, update, pos = (self.realize(a) for a in args)
+            return [ir.kv_cache_append(cache, update, pos)]
         if name == "round":
             return [_Pending("round", args, {}, shape, dtype)]
         if name == "clip" and len(args) == 3 and _is_lit(args[1]) and _is_lit(args[2]):

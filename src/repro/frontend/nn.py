@@ -11,11 +11,19 @@ using the helpers just keeps the recognized form in one place:
     max_pool2d(x, k)  = NHWC square reduce_window max                -> ir.max_pool2d
     dense(x, w)       = matmul with wide int accumulation            -> ir.dense
     conv2d(x, w)      = NHWC/HWIO conv with wide int accumulation    -> ir.conv2d
+
+The two KV-cache helpers are the exception to "nothing here is special":
+they are ``jax.jit``-wrapped so the traced jaxpr carries a *named* pjit
+call the importer can map 1:1 onto the stateful IR ops:
+
+    kv_cache_read(c)         = c (identity; marks state consumption) -> ir.kv_cache_read
+    kv_cache_append(c, u, p) = dynamic_update_slice at seq pos p     -> ir.kv_cache_append
 """
 
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -65,6 +73,40 @@ def dense(x, w):
             x, w, (((2,), (1,)), ((0,), (0,))), preferred_element_type=preferred
         )
     return jnp.matmul(x, w, preferred_element_type=preferred)
+
+
+@jax.jit
+def kv_cache_read(cache):
+    """Materialize the KV cache for attention -> ``ir.kv_cache_read``.
+
+    Numerically the identity; the ``jax.jit`` wrapper makes the call appear
+    in the jaxpr as a ``pjit`` equation named ``kv_cache_read``, which the
+    importer maps 1:1 to the stateful IR op (same mechanism as the named
+    ``relu``/``clip`` idioms).  A bare ``return cache`` would NOT survive:
+    jax forwards an identity jit's output var and leaves a dead pjit
+    equation with no outvars, so the body adds a scalar zero — bit-exact
+    identity for every dtype, but a real equation the importer can see.
+    """
+    return cache + jnp.zeros((), cache.dtype)
+
+
+@jax.jit
+def kv_cache_append(cache, update, pos):
+    """Write ``update``'s rows into ``cache`` at sequence position ``pos``
+    (axis -2), returning the updated cache -> ``ir.kv_cache_append``.
+
+    ``pos`` is a scalar, or ``[B]`` for per-request positions on a batched
+    ``[B, L, D]`` cache.  Writes must stay in bounds — the IR executor
+    raises where ``dynamic_update_slice`` would clamp.
+    """
+    if jnp.ndim(pos) == 0:
+        starts = tuple(0 for _ in range(cache.ndim - 2)) + (pos, 0)
+        return lax.dynamic_update_slice(cache, update, starts)
+    return jax.vmap(
+        lambda c, u, p: lax.dynamic_update_slice(
+            c, u, tuple(0 for _ in range(c.ndim - 2)) + (p, 0)
+        )
+    )(cache, update, pos)
 
 
 def conv2d(x, w, stride: int = 1, padding: int = 0):

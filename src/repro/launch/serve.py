@@ -117,6 +117,49 @@ def serve_zoo(args) -> None:
         print(f"[serve] sample output: {np.asarray(outs[0][0]).ravel()[:8]}")
 
 
+def serve_decode(args) -> None:
+    """Serve a decode-zoo model through the continuous-batching engine:
+    two compiled ExecutionPlans (prefill + batched decode step) over a
+    block-based KV pool, finished slots backfilled from the queue."""
+    import repro
+    from repro.core.zoo import get_decode_model
+    from repro.serve import ContinuousBatchingEngine, EngineConfig, random_requests
+
+    model = get_decode_model(args.zoo)
+    target = repro.Target.parse(args.target)
+    prompt_len = min(args.prompt_len, model.max_len - args.new_tokens)
+    if prompt_len < 1:
+        raise SystemExit(
+            f"--new-tokens {args.new_tokens} leaves no room for a prompt "
+            f"inside the {model.max_len}-row KV cache"
+        )
+    cfg = EngineConfig(
+        batch=args.batch,
+        prompt_len=prompt_len,
+        max_new_tokens=args.new_tokens,
+    )
+    t0 = time.perf_counter()
+    engine = ContinuousBatchingEngine(model, target, cfg)
+    t_boot = time.perf_counter() - t0
+    requests = random_requests(model, args.requests, cfg.prompt_len, seed=0)
+    report = engine.run(requests)
+    print(
+        f"[serve] {model.name} on {target.describe()}: continuous batching, "
+        f"{cfg.batch} decode slots, compiled prefill+decode plans in "
+        f"{t_boot * 1e3:.1f} ms (cold start)"
+    )
+    print(
+        f"[serve] {len(report.requests)} requests, {report.total_new_tokens} tokens "
+        f"in {report.wall_s:.3f}s ({report.tokens_per_s:.0f} tok/s); "
+        f"{report.decode_steps} decode steps, {report.prefills} prefills"
+    )
+    print(
+        f"[serve] block pool: {report.n_blocks} blocks x {report.block_size} "
+        f"rows, peak occupancy {report.peak_occupancy:.1%}"
+    )
+    print("[serve] sample tokens:", requests[0].tokens[:8])
+
+
 def serve_lm(args) -> None:
     import jax
 
@@ -202,7 +245,12 @@ def main():
     if args.batch < 1:
         raise SystemExit("--batch must be >= 1")
     if args.zoo:
-        serve_zoo(args)
+        from repro.core.zoo import decode_model_names
+
+        if args.zoo in decode_model_names():
+            serve_decode(args)
+        else:
+            serve_zoo(args)
     else:
         serve_lm(args)
 

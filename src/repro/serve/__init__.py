@@ -1,4 +1,27 @@
+from repro.serve.continuous import (
+    BlockPool,
+    ContinuousBatchingEngine,
+    DecodeRequest,
+    EngineConfig,
+    PoolExhausted,
+    ServeReport,
+    random_requests,
+    sequential_generate,
+)
 from repro.serve.engine import ServeConfig, ServingEngine
 from repro.serve.microbatch import BatchStats, MicroBatcher
 
-__all__ = ["BatchStats", "MicroBatcher", "ServeConfig", "ServingEngine"]
+__all__ = [
+    "BatchStats",
+    "BlockPool",
+    "ContinuousBatchingEngine",
+    "DecodeRequest",
+    "EngineConfig",
+    "MicroBatcher",
+    "PoolExhausted",
+    "ServeConfig",
+    "ServeReport",
+    "ServingEngine",
+    "random_requests",
+    "sequential_generate",
+]

@@ -40,7 +40,21 @@ class Request:
 
 
 class ServingEngine:
+    """DEPRECATED: the wave-based jax.jit serving loop.
+
+    Superseded by ``repro.serve.ContinuousBatchingEngine``, which serves the
+    compiled decode path (KV-cache IR + block-based pool) and never restarts
+    the batch between waves.  This class stays for the raw ``models/lm``
+    research stack only.
+    """
+
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        from repro.core.deprecation import warn_deprecated
+
+        warn_deprecated(
+            "repro.serve.ServingEngine",
+            "repro.serve.ContinuousBatchingEngine (the compiled decode path)",
+        )
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg

@@ -230,9 +230,15 @@ def _jnp_gelu(x):
 
 
 def jnp_reference(graph: ir.Graph, feeds: dict) -> np.ndarray:
-    """Evaluate the (pre-pass) graph with jax.numpy ops — int32
-    accumulation and float32 requantization, i.e. accelerator-kernel
-    numerics rather than the interpreter's int64/float64."""
+    """Evaluate the (pre-pass) graph with jax.numpy ops and return the
+    first output (see ``jnp_reference_outputs`` for stateful multi-output
+    graphs) — int32 accumulation and float32 requantization, i.e.
+    accelerator-kernel numerics rather than the interpreter's
+    int64/float64."""
+    return jnp_reference_outputs(graph, feeds)[0]
+
+
+def jnp_reference_outputs(graph: ir.Graph, feeds: dict) -> list[np.ndarray]:
     vals: dict[ir.Node, jax.Array] = {}
     for n in graph.toposort():
         ins = [vals[i] if i is not None else None for i in n.inputs]
@@ -280,10 +286,26 @@ def jnp_reference(graph: ir.Graph, feeds: dict) -> np.ndarray:
             v = ins[0] + ins[1]
         elif op == "mul":
             v = ins[0] * ins[1]
+        elif op == "quantize":
+            v = jnp.clip(
+                jnp.round(ins[0] / n.attrs["scale"]), -128, 127
+            ).astype(n.dtype)
+        elif op == "dequantize":
+            v = ins[0].astype(jnp.float32) * n.attrs["scale"]
+        elif op == "softmax":
+            v = jax.nn.softmax(
+                ins[0].astype(jnp.float32), axis=n.attrs.get("axis", -1)
+            ).astype(n.dtype)
+        elif op == "kv_cache_read":
+            v = ins[0]
+        elif op == "kv_cache_append":
+            cache, upd, pos = ins
+            starts = (0,) * (cache.ndim - 2) + (pos, jnp.zeros((), pos.dtype))
+            v = jax.lax.dynamic_update_slice(cache, upd, starts)
         else:
             raise NotImplementedError(f"jnp_reference: {op}")
         vals[n] = v
-    return np.asarray(vals[graph.outputs[0]])
+    return [np.asarray(vals[o]) for o in graph.outputs]
 
 
 # ---------------------------------------------------------------------------
@@ -343,6 +365,99 @@ def test_seeded_differential_sweep_pallas(seed):
     rng = np.random.default_rng(3000 + seed)
     maker = SPEC_MAKERS[seed % len(SPEC_MAKERS)]
     check_conformance(maker(rng), seed=4000 + seed, use_pallas=True)
+
+
+# -- stateful decode arm: KV-cache graphs, all outputs compared --------------
+
+
+def _decode_step_spec(rng: np.random.Generator) -> dict:
+    """A random single-sample decode step: quantized attention over an
+    int8 KV cache at varied (d_model, max_len, pos).  Every scale is
+    dyadic so int8 outputs are bit-exact across all three evaluators."""
+    d = int(rng.choice([8, 16]))
+    max_len = int(rng.choice([16, 32]))
+    return {
+        "kind": "decode_step",
+        "d": d,
+        "max_len": max_len,
+        "pos": int(rng.integers(1, max_len - 1)),
+    }
+
+
+def _materialize_decode(spec: dict, seed: int):
+    from repro.core.zoo import TF_PROBS_SCALE, TF_RQ_SCALE, TF_W_SCALE, decode_mask
+
+    d, ml, pos = spec["d"], spec["max_len"], spec["pos"]
+    rng = np.random.default_rng(seed)
+    ws = {t: (rng.normal(size=(d, d)) * 0.05).astype(np.float32)
+          for t in ("q", "k", "v", "attn")}
+    bs = {t: rng.integers(-64, 64, size=(d,)).astype(np.int32)
+          for t in ("q", "k", "v", "attn")}
+
+    def build():
+        x = ir.input_((1, d), "int8", name="x")
+        k_cache = ir.input_((ml, d), "int8", name="k_cache")
+        v_cache = ir.input_((ml, d), "int8", name="v_cache")
+        p = ir.input_((), "int32", name="pos")
+        mask = ir.input_((1, ml), "float32", name="mask")
+
+        def proj(h, tag):
+            w_q = ir.quantize(ir.transpose(ir.const(ws[tag]), (1, 0)),
+                              scale=TF_W_SCALE)
+            dn = ir.bias_add(ir.dense(h, w_q), ir.const(bs[tag]))
+            return ir.clip(ir.requantize(dn, scale=TF_RQ_SCALE), lo=-128, hi=127)
+
+        q = proj(x, "q")
+        kc = ir.kv_cache_append(k_cache, proj(x, "k"), p)
+        vc = ir.kv_cache_append(v_cache, proj(x, "v"), p)
+        k_all = ir.kv_cache_read(kc)
+        v_all = ir.kv_cache_read(vc)
+        scores = ir.dense(q, ir.transpose(k_all, (1, 0)))
+        masked = ir.add(ir.dequantize(scores, scale=1.0 / (64.0 * d)), mask)
+        probs = ir.quantize(ir.softmax(masked), scale=TF_PROBS_SCALE)
+        ctx = ir.requantize(ir.dense(probs, v_all), scale=TF_RQ_SCALE)
+        out = ir.add(proj(ctx, "attn"), x)
+        return ir.Graph([out, kc, vc], name="fuzz_decode")
+
+    kc = np.zeros((ml, d), np.int8)
+    vc = np.zeros((ml, d), np.int8)
+    kc[:pos] = rng.integers(-128, 128, (pos, d))
+    vc[:pos] = rng.integers(-128, 128, (pos, d))
+    feeds = {
+        "x": rng.integers(-128, 128, (1, d)).astype(np.int8),
+        "k_cache": kc,
+        "v_cache": vc,
+        "pos": np.asarray(pos, np.int32),
+        "mask": decode_mask(np.asarray(pos), ml),
+    }
+    return build, feeds
+
+
+def check_decode_conformance(spec: dict, seed: int):
+    """The three-way oracle over a stateful decode step, comparing ALL
+    outputs (token row + both cache planes) — the cache threading the
+    serve engine depends on is part of the contract."""
+    build, feeds = _materialize_decode(spec, seed)
+    interpreted = ir.execute_graph(build(), feeds)
+    reference = jnp_reference_outputs(build(), feeds)
+    assert len(interpreted) == len(reference) == 3
+    for i, (a, b) in enumerate(zip(interpreted, reference)):
+        _assert_same(a, b, f"decode-interpreter-vs-jnp[out{i}]", spec)
+    for acc in ACCELERATORS:
+        for mode in MODES:
+            module = repro.compile(build(), _target(acc, mode))
+            planned = module.run(feeds)
+            for i, (a, b) in enumerate(zip(planned, interpreted)):
+                _assert_same(
+                    a, b, f"decode-planned[{acc}:{mode}]-vs-interpreter[out{i}]",
+                    spec,
+                )
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_seeded_decode_differential_sweep(seed):
+    rng = np.random.default_rng(7000 + seed)
+    check_decode_conformance(_decode_step_spec(rng), seed=8000 + seed)
 
 
 # -- sharded arm: sharded == single-device == jnp reference ------------------

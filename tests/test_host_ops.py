@@ -73,6 +73,17 @@ CASES = [
     _case("shard_slice",
           lambda: ir.shard_slice(ir.input_((4, 8), "int32", name="x"), 1, 1, 2),
           {"x": _i32(4, 8)}),
+    _case("kv_cache_read",
+          lambda: ir.kv_cache_read(ir.input_((16, 8), "int8", name="x")),
+          {"x": _i8(16, 8)}),
+    _case("kv_cache_append",
+          lambda: ir.kv_cache_append(
+              ir.input_((16, 8), "int8", name="x"),
+              ir.input_((1, 8), "int8", name="u"),
+              ir.input_((), "int32", name="pos"),
+          ),
+          {"x": _i8(16, 8), "u": _i8(1, 8),
+           "pos": np.asarray(5, np.int32)}),
 ]
 
 

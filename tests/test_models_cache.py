@@ -1,0 +1,123 @@
+"""KV-cache storage tests (``models/cache.py``): int8 quantize/dequantize
+round trips, cache constructor shapes across dtype/MLA flavors, and the
+write/read round trip the decode loop depends on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.cache import (
+    dequantize_kv,
+    make_attn_cache,
+    quantize_kv,
+    read_attn_cache,
+    write_attn_cache,
+)
+
+RNG = np.random.default_rng(3)
+
+
+# -- int8 KV quantization ------------------------------------------------------
+
+
+def test_quantize_kv_round_trip_error_bounded_by_half_scale():
+    """Symmetric per-row int8: |x - dq(q(x))| <= scale/2 element-wise."""
+    x = jnp.asarray(RNG.normal(size=(2, 4, 16, 32)).astype(np.float32) * 3.0)
+    q, scale = quantize_kv(x)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    assert scale.dtype == jnp.float32 and scale.shape == (2, 4, 16, 1)
+    back = dequantize_kv(q, scale, dtype=jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert np.all(err <= np.asarray(scale) / 2 + 1e-6)
+
+
+def test_quantize_kv_is_idempotent_on_its_own_grid():
+    """Quantizing an already-dequantized tensor reproduces the same codes:
+    the row max lands exactly on +/-127, so the grid is a fixed point."""
+    x = jnp.asarray(RNG.normal(size=(8, 32)).astype(np.float32))
+    q1, s1 = quantize_kv(x)
+    back = dequantize_kv(q1, s1, dtype=jnp.float32)
+    q2, s2 = quantize_kv(back)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_quantize_kv_zero_rows_use_floor_scale():
+    """An all-zero row must not divide by zero: the 1e-8 floor kicks in and
+    the codes stay zero."""
+    x = jnp.zeros((3, 16), jnp.float32)
+    q, scale = quantize_kv(x)
+    assert np.all(np.asarray(q) == 0)
+    np.testing.assert_allclose(np.asarray(scale), 1e-8)
+
+
+def test_quantize_kv_saturates_at_int8_limits():
+    x = jnp.asarray(np.array([[1.0, -1.0, 0.5, 0.0]], np.float32))
+    q, scale = quantize_kv(x)
+    assert int(np.asarray(q).max()) == 127
+    assert int(np.asarray(q).min()) == -127  # symmetric: amax maps to +/-127
+    np.testing.assert_allclose(np.asarray(scale), 1.0 / 127.0, rtol=1e-6)
+
+
+# -- cache constructors --------------------------------------------------------
+
+
+def _cfg(**over):
+    return get_smoke_config("qwen1_5_32b").with_(**over)
+
+
+def test_make_attn_cache_bf16_shapes():
+    cfg = _cfg()
+    cache = make_attn_cache(cfg, batch=2, max_len=32)
+    dh = cfg.head_dim_
+    assert set(cache) == {"k", "v"}
+    for name in ("k", "v"):
+        assert cache[name].shape == (2, cfg.n_kv_heads, 32, dh)
+        assert cache[name].dtype == jnp.bfloat16
+
+
+def test_make_attn_cache_int8_adds_scale_planes():
+    cfg = _cfg(kv_cache_dtype="int8")
+    cache = make_attn_cache(cfg, batch=2, max_len=32)
+    assert set(cache) == {"k", "v", "k_scale", "v_scale"}
+    assert cache["k"].dtype == jnp.int8 and cache["v"].dtype == jnp.int8
+    for name in ("k_scale", "v_scale"):
+        assert cache[name].shape == (2, cfg.n_kv_heads, 32, 1)
+        assert cache[name].dtype == jnp.float32
+
+
+def test_make_attn_cache_mla_stores_latent_plus_rope():
+    cfg = get_smoke_config("deepseek_v2_236b")
+    assert cfg.kv_lora_rank > 0
+    cache = make_attn_cache(cfg, batch=2, max_len=16)
+    assert set(cache) == {"latent", "k_rope"}
+    assert cache["latent"].shape == (2, 16, cfg.kv_lora_rank)
+    assert cache["k_rope"].shape == (2, 16, cfg.qk_rope_dim)
+
+
+# -- write/read round trip -----------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_dtype", ["bfloat16", "int8"])
+def test_write_then_read_returns_written_rows(kv_dtype):
+    cfg = _cfg(kv_cache_dtype=kv_dtype)
+    dh = cfg.head_dim_
+    cache = make_attn_cache(cfg, batch=1, max_len=16)
+    k = jnp.asarray(RNG.normal(size=(1, cfg.n_kv_heads, 4, dh)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(1, cfg.n_kv_heads, 4, dh)).astype(np.float32))
+    cache = write_attn_cache(cfg, cache, k, v, None, pos=3)
+    rk, rv = read_attn_cache(cfg, cache, dtype=jnp.float32)
+    assert rk.shape == (1, cfg.n_kv_heads, 16, dh)
+    # rows [3, 7) hold the write (exactly for bf16-in-f32, within scale/2
+    # for int8); rows outside stay zero
+    got = np.asarray(rk)[:, :, 3:7]
+    if kv_dtype == "int8":
+        _, scale = quantize_kv(k)
+        assert np.all(np.abs(got - np.asarray(k)) <= np.asarray(scale) / 2 + 1e-6)
+    else:
+        np.testing.assert_allclose(
+            got, np.asarray(k.astype(jnp.bfloat16).astype(jnp.float32))
+        )
+    assert np.all(np.asarray(rk)[:, :, :3] == 0)
+    assert np.all(np.asarray(rv)[:, :, 7:] == 0)

@@ -1,5 +1,7 @@
 """Serving-layer tests: the micro-batching request queue and the
-``launch/serve.py`` zoo driver (warmup, guarded math, p50/p99 reporting)."""
+``launch/serve.py`` zoo driver (warmup, guarded math, p50/p99 reporting),
+plus the decode-zoo continuous-batching driver and the ServingEngine
+deprecation."""
 
 import argparse
 import time
@@ -9,7 +11,7 @@ import pytest
 
 import repro
 from repro.core.zoo import get_model
-from repro.launch.serve import serve_zoo
+from repro.launch.serve import serve_decode, serve_zoo
 from repro.serve import MicroBatcher
 
 
@@ -186,3 +188,65 @@ def test_serve_zoo_rejects_single_shape_artifact(
     repro.save(mlp_reference, art)
     with pytest.raises(SystemExit, match="batched artifact"):
         serve_zoo(_serve_args(artifact=str(art)))
+
+
+# -- serve_decode driver -------------------------------------------------------
+
+
+def _decode_args(**overrides):
+    base = dict(
+        zoo="attn_decode",
+        target="gemmini:optimized",
+        requests=6,
+        batch=4,
+        prompt_len=8,
+        new_tokens=4,
+    )
+    base.update(overrides)
+    return argparse.Namespace(**base)
+
+
+def test_serve_decode_banner_reports_engine_state(capsys):
+    """The decode driver must boot the continuous-batching engine and report
+    tokens/s plus block-pool occupancy — this banner is what CI greps."""
+    serve_decode(_decode_args())
+    out = capsys.readouterr().out
+    assert "continuous batching" in out
+    assert "block pool" in out
+    assert "tok/s" in out
+    assert "peak occupancy" in out
+    assert "6 requests" in out
+    assert "24 tokens" in out  # 6 requests x 4 new tokens each
+    assert "prefill+decode plans" in out  # both compiled plans booted
+
+
+def test_serve_decode_clamps_prompt_to_cache_budget(capsys):
+    """A prompt longer than max_len - new_tokens is clamped, not crashed."""
+    from repro.core.zoo import get_decode_model
+
+    model = get_decode_model("attn_decode")
+    serve_decode(_decode_args(requests=2, prompt_len=model.max_len + 7))
+    out = capsys.readouterr().out
+    assert "2 requests" in out
+
+
+def test_serve_decode_rejects_new_tokens_exceeding_cache(capsys):
+    from repro.core.zoo import get_decode_model
+
+    model = get_decode_model("attn_decode")
+    with pytest.raises(SystemExit, match="KV cache"):
+        serve_decode(_decode_args(new_tokens=model.max_len))
+
+
+# -- ServingEngine deprecation -------------------------------------------------
+
+
+def test_serving_engine_is_deprecated():
+    """The wave-based jax.jit loop warns ReproDeprecationWarning, pointing
+    at the compiled continuous-batching path."""
+    from repro.configs import get_smoke_config
+    from repro.core.deprecation import ReproDeprecationWarning
+    from repro.serve import ServeConfig, ServingEngine
+
+    with pytest.warns(ReproDeprecationWarning, match="ContinuousBatchingEngine"):
+        ServingEngine(get_smoke_config("xlstm_125m"), None, ServeConfig())

@@ -58,6 +58,7 @@ from repro.core.registry import (
 )
 from repro.core.schedule_cache import ScheduleCache, default_cache_dir
 from repro.core.sharded import ShardedModule
+from repro.core.verify import Diagnostic, VerifyError, verify
 from repro.frontend import UnsupportedJaxprError, trace_model
 
 __version__ = "0.2.0"
@@ -71,6 +72,7 @@ __all__ = [
     "CapabilityError",
     "CompileOptions",
     "DEFAULT_BATCH_BUCKETS",
+    "Diagnostic",
     "FeedError",
     "GemmWorkload",
     "IntegrationError",
@@ -81,6 +83,7 @@ __all__ = [
     "Target",
     "TargetError",
     "UnsupportedJaxprError",
+    "VerifyError",
     "backend_for",
     "build_integrated_backend",
     "clear_backend_cache",
@@ -93,5 +96,6 @@ __all__ = [
     "save",
     "trace_model",
     "validate_description",
+    "verify",
     "__version__",
 ]

@@ -252,12 +252,25 @@ class CompileOptions:
     #: ``passes`` overrides the per-mode pipeline (custom pipelines are not
     #: part of the key).  See also ``repro.save`` / ``repro.load``.
     artifact_dir: str | Path | None = None
+    #: static-verification gate (``repro.core.verify``): ``'each'`` runs
+    #: the graph verifier before the first and after every compiler pass
+    #: and the plan analysis on the finalized ExecutionPlan; ``'final'``
+    #: verifies once after the pipeline; ``'off'`` disables the gate.
+    #: None (default) defers to the ``REPRO_VERIFY`` env var.  Sharded
+    #: compiles additionally check cross-shard collective-sequence
+    #: consistency (the static deadlock detector).
+    verify: str | None = None
 
     def __post_init__(self):
         k = self.measure_top_k
         if k is not None and (not isinstance(k, int) or k < 1):
             raise ValueError(
                 f"measure_top_k must be a positive int or None, got {k!r}"
+            )
+        if self.verify not in (None, "each", "final", "off"):
+            raise ValueError(
+                f"verify must be 'each', 'final', 'off', or None, got "
+                f"{self.verify!r}"
             )
 
 
@@ -541,6 +554,7 @@ def compile(
             passes=options.passes,
             pass_context=options.pass_context,
             measure_top_k=options.measure_top_k,
+            verify=options.verify,
         )
         if not options.allow_host_fallback:
             _check_offload(module)
@@ -568,10 +582,26 @@ def compile(
                     shard=ShardSpec(
                         data=dp_eff, model=mp, data_rank=d, model_rank=m
                     ),
+                    verify=options.verify,
                 )
                 if not options.allow_host_fallback:
                     _check_offload(module)
                 shards[(d, m)] = module
+        from repro.core.verify import resolve_verify
+
+        if resolve_verify(options.verify) != "off":
+            # the per-shard gate proved each plan sound in isolation; the
+            # cross-shard property — a consistent collective sequence on
+            # every shard — is what rules out a rendezvous deadlock
+            from repro.core.verify import VerifyError, verify_collectives
+
+            diags = verify_collectives(shards)
+            if diags:
+                raise VerifyError(
+                    f"sharded compile of {base_graph.name!r} "
+                    f"(mesh data={dp_eff}, model={mp})",
+                    diags,
+                )
         return ShardedModule(
             shards=shards, mesh=(dp_eff, mp), signature=signature
         )

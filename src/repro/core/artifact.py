@@ -50,7 +50,7 @@ import numpy as np
 from repro.core.batching import BatchedModule, _IOSpec
 from repro.core.configurators import build_backend
 from repro.core.executor import CompiledModule, CompiledOp
-from repro.core.ir import Graph, Node
+from repro.core.ir import CacheSpec, Graph, Node
 from repro.core.pass_manager import PassStats, PipelineReport
 from repro.core.registry import REGISTRY
 from repro.core.schedule_cache import result_from_dict, result_to_dict
@@ -132,13 +132,37 @@ def graph_to_dict(graph: Graph) -> tuple[dict, dict[str, np.ndarray]]:
         )
         if n.op == "const":
             arrays[f"const_{i}"] = np.ascontiguousarray(n.value)
-    return (
-        {
-            "name": graph.name,
-            "nodes": nodes,
-            "outputs": [idx[o] for o in graph.outputs],
-        },
-        arrays,
+    d = {
+        "name": graph.name,
+        "nodes": nodes,
+        "outputs": [idx[o] for o in graph.outputs],
+    }
+    # the decode-state contract travels with the graph: without it a loaded
+    # decode artifact cannot feed cache outputs back as next-step inputs
+    if graph.cache_spec is not None:
+        d["cache_spec"] = _cache_spec_to_dict(graph.cache_spec)
+    return d, arrays
+
+
+def _cache_spec_to_dict(spec: CacheSpec) -> dict:
+    return {
+        "max_len": spec.max_len,
+        "dtype": spec.dtype,
+        "layout": spec.layout,
+        "state": [[name, idx] for name, idx in spec.state],
+        "pos_input": spec.pos_input,
+        "mask_input": spec.mask_input,
+    }
+
+
+def _cache_spec_from_dict(d: dict) -> CacheSpec:
+    return CacheSpec(
+        max_len=d["max_len"],
+        dtype=d["dtype"],
+        layout=d["layout"],
+        state=tuple((name, idx) for name, idx in d["state"]),
+        pos_input=d["pos_input"],
+        mask_input=d["mask_input"],
     )
 
 
@@ -157,7 +181,15 @@ def graph_from_dict(d: dict, arrays) -> Graph:
                 value=arrays[f"const_{i}"] if nd["op"] == "const" else None,
             )
         )
-    return Graph(outputs=[nodes[j] for j in d["outputs"]], name=d["name"])
+    return Graph(
+        outputs=[nodes[j] for j in d["outputs"]],
+        name=d["name"],
+        cache_spec=(
+            _cache_spec_from_dict(d["cache_spec"])
+            if d.get("cache_spec")
+            else None
+        ),
+    )
 
 
 def graph_fingerprint(graph: Graph) -> str:
@@ -186,6 +218,14 @@ def graph_fingerprint(graph: Graph) -> str:
             h.update(f"{v.dtype}{v.shape}".encode())
             h.update(v.tobytes())
     h.update(json.dumps([idx[o] for o in graph.outputs]).encode())
+    # the decode-state contract is part of the graph's identity; stateless
+    # graphs hash exactly as before (no material added)
+    if graph.cache_spec is not None:
+        h.update(
+            json.dumps(
+                _cache_spec_to_dict(graph.cache_spec), sort_keys=True
+            ).encode()
+        )
     return h.hexdigest()
 
 
@@ -386,6 +426,11 @@ def load_module(path: str | Path, *, desc=None) -> CompiledModule:
     Validation is strict and every failure is an :class:`ArtifactError`
     naming the mismatch: schema version, npz content hash, architecture
     fingerprint, stored-graph fingerprint, and the rebuilt-plan skeleton.
+    The restored module is then *statically verified* (``repro.core.
+    verify``): the fingerprint proves the stored bytes are what was saved,
+    the verifier proves those bytes describe a consistent graph and plan —
+    a hand-edited (fingerprint-recomputed) manifest with, say, a shape
+    tamper is rejected here as a ``VerifyError``, not by a runtime crash.
     Restoration performs zero DSE sweeps, zero measurements, and zero
     pass-pipeline rewrites: executors are re-derived from the persisted
     schedules and the plan is rebuilt deterministically."""
@@ -445,6 +490,14 @@ def load_module(path: str | Path, *, desc=None) -> CompiledModule:
             f"from the stored graph/schedules does not match the stored "
             f"skeleton (compiler drift across versions?)"
         )
+    # static verification of the restored graph + plan: the skeleton check
+    # above proves the plan matches the manifest, the verifier proves both
+    # are internally consistent (shapes, dtypes, targets, slot lifetimes)
+    from repro.core.verify import VerifyError, verify_graph, verify_plan
+
+    diags = verify_graph(graph, desc) + verify_plan(plan)
+    if diags:
+        raise VerifyError(f"artifact at {path}", diags)
     return module
 
 
@@ -502,6 +555,15 @@ def load_sharded(path: str | Path, *, desc=None) -> ShardedModule:
         for d in range(dp)
         for m in range(mp)
     }
+    # per-shard artifacts were verified individually by load_module; the
+    # cross-shard property — every shard issuing a consistent collective
+    # sequence — is what turns a run-time rendezvous deadlock into a
+    # load-time error, so check it before the module can execute
+    from repro.core.verify import VerifyError, verify_collectives
+
+    diags = verify_collectives(shards)
+    if diags:
+        raise VerifyError(f"sharded artifact at {path}", diags)
     return ShardedModule(
         shards=shards,
         mesh=(dp, mp),
@@ -665,9 +727,13 @@ class ArtifactStore:
         if not (p / _MANIFEST).exists():
             self.misses += 1
             return None
+        from repro.core.verify import VerifyError
+
         try:
             module = load_module(p, desc=desc)
-        except ArtifactError as e:
+        except (ArtifactError, VerifyError) as e:
+            # VerifyError included: a cached entry that fails static
+            # verification is as unusable as a torn one — recompile
             warnings.warn(
                 f"ignoring unusable compile artifact at {p}: {e}",
                 RuntimeWarning,

@@ -301,6 +301,13 @@ class ExecutionPlan:
     def lane_sizes(self) -> dict[str, int]:
         return {k: len(v) for k, v in self._lane_steps.items()}
 
+    def recorded_lane_steps(self) -> dict[str, tuple]:
+        """The precomputed per-lane ``(slot, fn, arg_slots, watermark)``
+        tuples the pipelined executor actually runs — exposed so
+        ``repro.core.verify`` can independently re-derive the watermarks
+        and check dominance (the static race detector)."""
+        return self._lane_steps
+
     def execute_lane(self, arena: list, state: _CallState, lane: str) -> None:
         """Run one lane of one call.  Steps run in topo order; before each
         step the other lane's watermark must reach the step's recorded

@@ -55,6 +55,7 @@ from repro.core.lowering import make_accel_executor
 from repro.core.mapping import MappingGenerator
 from repro.core.pass_manager import PassContext, PassManager
 from repro.core.passes import passes_for_mode
+from repro.core.schedule import validate_schedule
 from repro.core.schedule_cache import ScheduleCache
 from repro.core.scheduler import ExtendedCosaScheduler, ScheduleResult
 from repro.core.simulator import simulate
@@ -126,7 +127,7 @@ class CompilerBackend:
     ) -> ScheduleResult:
         wl = workload_from_node(node)
         if measure_top_k is None:
-            return self._modeled_schedule_for(wl, mode)
+            return self._checked_schedule(node, self._modeled_schedule_for(wl, mode))
         mkey = None
         if self.schedule_cache is not None:
             mkey = self._cache_key(
@@ -134,13 +135,30 @@ class CompilerBackend:
             )
             cached = self.schedule_cache.get(mkey)
             if cached is not None:
-                return cached
+                return self._checked_schedule(node, cached)
         # the modeled ranking feeds the measurement and is cached under its
         # own key, so a later compile without measure_top_k is warm too
         modeled = self._modeled_schedule_for(wl, mode)
         result = self._measure_candidates(node, modeled, measure_top_k)
         if mkey is not None:
             self.schedule_cache.put(mkey, result)
+        return self._checked_schedule(node, result)
+
+    def _checked_schedule(self, node: Node, result: ScheduleResult) -> ScheduleResult:
+        """Assert ``schedule.validate_schedule`` on every selected schedule
+        — modeled winners, measured-DSE winners, and cache hits alike — so
+        a schedule that violates a hardware constraint (e.g. a corrupt or
+        stale cache entry for a since-shrunk scratchpad) fails compilation
+        instead of lowering to a kernel that overflows the hardware."""
+        errors = validate_schedule(result.best, self.desc.arch)
+        if errors:
+            from repro.core.verify import Diagnostic, VerifyError
+
+            raise VerifyError(
+                f"selected schedule for node {node.name!r} on "
+                f"{self.desc.name!r}",
+                [Diagnostic("S_SCHEDULE", node.name, e) for e in errors],
+            )
         return result
 
     def _modeled_schedule_for(self, wl, mode: str) -> ScheduleResult:
@@ -252,6 +270,7 @@ class CompilerBackend:
         pass_context: PassContext | None = None,
         measure_top_k: int | None = None,
         shard=None,
+        verify: str | None = None,
     ) -> CompiledModule:
         """Compile a graph: run the mode's pass pipeline, schedule every
         accelerator node, lower executors, and build the execution plan.
@@ -265,13 +284,18 @@ class CompilerBackend:
         wall-clock winner is selected (cached under a ``measured{K}`` key).
         ``shard`` (a ``collective.ShardSpec``) compiles ONE mesh shard's
         plan: the shard-partitioning pass runs before ``partition`` (see
-        ``repro.core.sharded`` for the executor side).
+        ``repro.core.sharded`` for the executor side).  ``verify`` is the
+        static-verification gate (``'each'``/``'final'``/``'off'``; ``None``
+        reads ``REPRO_VERIFY``): the pass-invariant gate inside the
+        ``PassManager`` plus a plan-level lifetime/race analysis of the
+        finalized ``ExecutionPlan``.
         """
         mode = resolve_mode(mode)
         pm = PassManager(
             passes_for_mode(self.desc, mode, shard=shard)
             if passes is None
-            else passes
+            else passes,
+            verify=verify,
         )
         # never mutate a caller-supplied context: it may be shared across
         # backends or concurrent compiles
@@ -295,5 +319,13 @@ class CompilerBackend:
             self.schedule_cache.flush()
         # precompute the execution plan (topo order, slot indices, buffer
         # arena) once here, so every run() is a flat loop over planned steps.
-        module.finalize()
+        plan = module.finalize()
+        if pm.resolved_verify() != "off":
+            from repro.core.verify import VerifyError, verify_plan
+
+            diags = verify_plan(plan)
+            if diags:
+                raise VerifyError(
+                    f"execution plan for graph {graph.name!r}", diags
+                )
         return module

@@ -83,6 +83,18 @@ class ShardedModule:
     def shard_module(self, data_rank: int = 0, model_rank: int = 0) -> CompiledModule:
         return self.shards[(data_rank, model_rank)]
 
+    def collective_sequences(self) -> dict[tuple[int, int], list[dict]]:
+        """Per-shard ordered collective descriptors (group, op, rank,
+        parts, axis, dtype, contribution shape) in plan-step order — the
+        input of ``repro.core.verify.verify_collectives``, which proves the
+        mesh cannot deadlock at a rendezvous."""
+        from repro.core.verify import collective_sequence
+
+        return {
+            key: collective_sequence(shard.graph)
+            for key, shard in sorted(self.shards.items())
+        }
+
     def input_signature(self) -> tuple[tuple[str, tuple[int, ...], str], ...]:
         return self.signature
 
